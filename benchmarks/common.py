@@ -1,0 +1,37 @@
+"""Shared benchmark plumbing: result tables + text rendering."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Sequence
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "benchmarks")
+
+
+def save_table(name: str, header: List[str], rows: List[List],
+               meta: Dict | None = None) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as fh:
+        json.dump({"header": header, "rows": rows, "meta": meta or {}}, fh,
+                  indent=1)
+    return path
+
+
+def render(header: Sequence, rows: Sequence[Sequence], title: str = "") -> str:
+    widths = [max(len(str(h)), *(len(_fmt(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(header)]
+    lines = []
+    if title:
+        lines.append(f"== {title} ==")
+    lines.append("  ".join(str(h).rjust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        lines.append("  ".join(_fmt(v).rjust(w) for v, w in zip(r, widths)))
+    return "\n".join(lines)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.3g}" if abs(v) < 1e4 else f"{v:.3e}"
+    return str(v)

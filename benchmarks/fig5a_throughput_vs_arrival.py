@@ -1,0 +1,56 @@
+"""Fig. 5a: throughput vs arrival rate, DFTSP vs StB vs NoB,
+BLOOM-3B vs BLOOM-7.1B (W8A16 default quantization).
+
+Paper's claims to validate:
+  * throughput grows with arrival rate then saturates (edge constraints);
+  * DFTSP > StB > NoB at every rate;
+  * BLOOM-7.1B < BLOOM-3B throughput (larger model).
+"""
+from __future__ import annotations
+
+from benchmarks.common import render, save_table
+from repro.core.environment import paper_env
+from repro.core.epoch import simulate
+
+RATES = [5, 10, 25, 50, 100, 250]
+SCHEDS = ["dftsp", "stb", "nob"]
+MODELS = ["bloom-3b", "bloom-7b1"]
+
+
+def run(n_epochs: int = 20, seed: int = 0, quiet: bool = False):
+    rows = []
+    for model in MODELS:
+        env = paper_env(model, "W8A16")
+        for rate in RATES:
+            row = [model, rate]
+            for s in SCHEDS:
+                res = simulate(env, s, rate, n_epochs=n_epochs, seed=seed)
+                row.append(round(res.throughput, 3))
+            rows.append(row)
+    header = ["model", "rate", *SCHEDS]
+    out = render(header, rows, "Fig 5a: throughput (req/s) vs arrival rate")
+    if not quiet:
+        print(out)
+    save_table("fig5a", header, rows)
+
+    # paper-claim checks
+    ok = True
+    for model in MODELS:
+        sub = [r for r in rows if r[0] == model]
+        for r in sub:
+            if not (r[2] >= r[3] - 1e-9 and r[2] >= r[4] - 1e-9):
+                ok = False
+                print(f"  CLAIM VIOLATION dftsp>=stb,nob at {r}")
+        if not (sub[-1][2] >= sub[0][2]):
+            ok = False
+    b3 = sum(r[2] for r in rows if r[0] == "bloom-3b")
+    b7 = sum(r[2] for r in rows if r[0] == "bloom-7b1")
+    if b7 > b3:
+        ok = False
+        print("  CLAIM VIOLATION bloom-7.1b should be slower")
+    print(f"[fig5a] paper-claim checks: {'PASS' if ok else 'FAIL'}")
+    return rows, ok
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 5b: throughput vs user latency requirement.
+
+Paper's claims: throughput rises as deadlines loosen; BLOOM-3B > 7.1B;
+NoB struggles hardest under tight deadlines on the larger model.
+"""
+from __future__ import annotations
+
+from benchmarks.common import render, save_table
+from repro.core.environment import paper_env
+from repro.core.epoch import simulate
+from repro.core.request import RequestGenerator
+
+# the paper's tau domain is [0.5, 2.0]; beyond it NoB overtakes batching
+# (lone requests run unpadded => cheaper per the paper's own cost model) —
+# recorded as a beyond-paper observation in EXPERIMENTS.md §Repro-notes.
+TAU_RANGES = [(0.5, 0.75), (0.75, 1.0), (1.0, 1.5), (1.5, 2.0)]
+SCHEDS = ["dftsp", "stb", "nob"]
+MODELS = ["bloom-3b", "bloom-7b1"]
+RATE = 50
+
+
+def run(n_epochs: int = 20, seed: int = 0, quiet: bool = False):
+    rows = []
+    for model in MODELS:
+        env = paper_env(model, "W8A16")
+        for tau in TAU_RANGES:
+            row = [model, f"{tau[0]}-{tau[1]}s"]
+            for s in SCHEDS:
+                gen = RequestGenerator(rate=RATE, seed=seed, tau_range=tau)
+                res = simulate(env, s, RATE, n_epochs=n_epochs, seed=seed,
+                               gen=gen)
+                row.append(round(res.throughput, 3))
+            rows.append(row)
+    header = ["model", "tau", *SCHEDS]
+    out = render(header, rows, "Fig 5b: throughput (req/s) vs latency req")
+    if not quiet:
+        print(out)
+    save_table("fig5b", header, rows)
+
+    ok = True
+    for model in MODELS:
+        sub = [r for r in rows if r[0] == model]
+        # looser deadlines never hurt (allow small MC noise)
+        if sub[-1][2] + 0.25 < sub[0][2]:
+            ok = False
+            print(f"  CLAIM VIOLATION throughput vs tau for {model}")
+        for r in sub:
+            if r[2] + 1e-9 < max(r[3], r[4]):
+                ok = False
+                print(f"  CLAIM VIOLATION dftsp best at {r}")
+    print(f"[fig5b] paper-claim checks: {'PASS' if ok else 'FAIL'}")
+    return rows, ok
+
+
+if __name__ == "__main__":
+    run()

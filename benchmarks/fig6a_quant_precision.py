@@ -1,0 +1,51 @@
+"""Fig. 6a: throughput vs quantization precision (accuracy ignored).
+
+Paper's claims: lower precision => higher throughput (memory + beta);
+larger models handle fewer requests at equal precision.
+"""
+from __future__ import annotations
+
+from benchmarks.common import render, save_table
+from repro.core.environment import paper_env
+from repro.core.epoch import simulate
+from repro.core.request import RequestGenerator
+
+METHODS = ["W16A16", "W8A16", "W4A16-GPTQ"]
+MODELS = ["bloom-3b", "bloom-7b1", "opt-13b"]
+RATE = 100
+
+
+def run(n_epochs: int = 16, seed: int = 0, quiet: bool = False):
+    rows = []
+    for model in MODELS:
+        row = [model]
+        for m in METHODS:
+            env = paper_env(model, m)
+            # accuracy ignored in 6a: all users accept any dPPL
+            gen = RequestGenerator(rate=RATE, seed=seed, acc_range=(0.0, 0.0))
+            res = simulate(env, "dftsp", RATE, n_epochs=n_epochs, seed=seed,
+                           gen=gen)
+            row.append(round(res.throughput, 3))
+        rows.append(row)
+    header = ["model", *METHODS]
+    out = render(header, rows, "Fig 6a: throughput vs quantization precision")
+    if not quiet:
+        print(out)
+    save_table("fig6a", header, rows)
+
+    ok = True
+    for r in rows:
+        if not (r[1] <= r[2] + 0.3 and r[2] <= r[3] + 0.3):
+            ok = False
+            print(f"  CLAIM VIOLATION precision ordering at {r}")
+    for i in range(len(METHODS)):
+        col = [r[i + 1] for r in rows]
+        if not (col[0] >= col[1] >= col[2]):
+            ok = False
+            print(f"  CLAIM VIOLATION size ordering for {METHODS[i]}")
+    print(f"[fig6a] paper-claim checks: {'PASS' if ok else 'FAIL'}")
+    return rows, ok
+
+
+if __name__ == "__main__":
+    run()

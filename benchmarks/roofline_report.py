@@ -1,0 +1,47 @@
+"""Render the §Roofline table from the dry-run JSON artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import render, save_table
+
+HERE = os.path.dirname(__file__)
+DRYRUN = os.path.join(HERE, "..", "experiments")
+
+
+def load(name: str):
+    path = os.path.join(DRYRUN, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def run(quiet: bool = False):
+    rows = []
+    for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
+        data = load(fname)
+        if data is None:
+            print(f"[roofline] missing {fname} — run "
+                  f"`python -m repro.launch.dryrun` first")
+            continue
+        for r in data["results"]:
+            rows.append([
+                r["arch"], r["shape"], r["mesh"],
+                round(r["bytes_per_device"] / 2 ** 30, 2), r["fits"],
+                f"{r['t_compute']:.2e}", f"{r['t_memory']:.2e}",
+                f"{r['t_collective']:.2e}", r["bottleneck"][2:],
+                round(r["useful_compute_ratio"], 3),
+            ])
+    header = ["arch", "shape", "mesh", "GiB/dev", "fits", "t_comp",
+              "t_mem", "t_coll", "bottleneck", "useful"]
+    out = render(header, rows, "Roofline terms per (arch x shape x mesh)")
+    if not quiet:
+        print(out)
+    save_table("roofline", header, rows)
+    return rows, True
+
+
+if __name__ == "__main__":
+    run()

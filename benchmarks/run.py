@@ -1,0 +1,50 @@
+"""Run every benchmark (one per paper table/figure + the roofline report).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer epochs (CI smoke)")
+    args = ap.parse_args(argv)
+    n = 6 if args.fast else 16
+
+    from benchmarks import (fig5a_throughput_vs_arrival as f5a,
+                            fig5b_throughput_vs_latency as f5b,
+                            fig6a_quant_precision as f6a,
+                            fig6b_quant_accuracy as f6b,
+                            table3_pruning_complexity as t3,
+                            multi_llm_throughput as ml,
+                            roofline_report as rr)
+
+    results = {}
+    for name, mod, kw in (
+            ("fig5a", f5a, {"n_epochs": n}),
+            ("fig5b", f5b, {"n_epochs": n}),
+            ("fig6a", f6a, {"n_epochs": n}),
+            ("fig6b", f6b, {"n_epochs": n}),
+            ("table3", t3, {"n_epochs": max(4, n // 3)}),
+            ("multi_llm", ml, {"n_epochs": max(6, n // 2)}),
+            ("roofline", rr, {})):
+        t0 = time.time()
+        print(f"\n{'=' * 70}\n[bench] {name}\n{'=' * 70}")
+        _, ok = mod.run(**kw)
+        results[name] = ok
+        print(f"[bench] {name} done in {time.time() - t0:.1f}s")
+
+    print(f"\n{'=' * 70}")
+    for k, v in results.items():
+        print(f"  {k:10s} {'PASS' if v else 'FAIL'}")
+    print(f"{'=' * 70}")
+    return 0 if all(results.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

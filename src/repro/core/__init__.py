@@ -1,0 +1,5 @@
+"""The paper's contribution: edge-inference system model, DFTSP scheduler,
+quantization trade-off, and the epoch-based serving simulation."""
+from repro.core.request import Request, RequestGenerator     # noqa: F401
+from repro.core.environment import EdgeEnv, paper_env        # noqa: F401
+from repro.core.dftsp import dftsp_schedule                  # noqa: F401

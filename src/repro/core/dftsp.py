@@ -1,0 +1,239 @@
+"""DFTSP — optimal Depth-First Tree-Search with online tree-Pruning
+(paper Algorithm 1, §III).
+
+Outer loops (Algorithm 1 lines 2-9):
+  * z = |I~| .. 1 (target batch size, decreasing => first hit is optimal);
+  * requests sorted by slack tau~ descending; d = z .. |I~| sweeps the
+    candidate pool F_d (the top-d slackiest requests).
+
+Tree (for fixed z, d): candidates in F_d are grouped by output-length level
+N_1 < N_2 < ... < N_K; a depth-k node chooses v_k = |S'_k| (how many level-k
+requests are selected, cheapest-uplink first within the level).  DFS visits
+children largest-count first (favoring short-output requests, paper
+§III-C(1)) and depth-first so leaves are reached quickly.
+
+Online pruning (paper §III-C(2)):
+  * capacity prune — if the remaining levels cannot supply the missing
+    z - sum(v) requests, skip the subtree and the lower-index siblings;
+  * constraint prune — every P2 constraint is monotone in batch growth
+    (uplink/downlink/memory LHS only increase, latency slack only
+    decreases), so a partial selection that already violates one can never
+    be completed: the branch is redundant and is cut.
+
+Both louvers off (``prune=False``) + ascending child order reproduces the
+brute-force benchmark of Table III.  ``SearchStats`` counts visited nodes
+so benchmarks can report the complexity reduction.
+
+Feasibility is monotone in z (any feasible batch stays feasible after
+removing a request), so ``fast_z_bound`` computes a cheap per-constraint
+upper bound on z and starts the descent there — the returned solution is
+identical, only wasted top-of-range sweeps are skipped.  Disable it for
+the literal Algorithm 1 node-count accounting.
+
+Optimality note: the d-sweep is REQUIRED for optimality.  At
+d = rank of the min-slack member of an optimal S*, the pool F_d contains
+S* and every pool member has slack >= min-slack(S*); the cheapest-uplink
+within-level greedy then dominates S* on every constraint (same counts per
+level => same memory, <= uplink/downlink, >= min slack), so the count
+vector of S* yields a feasible leaf.  ``d_sweep=False`` (single search on
+the full pool) is a fast heuristic, not the paper algorithm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import comm, problem
+from repro.core.environment import EdgeEnv
+from repro.core.request import Request
+
+
+@dataclass
+class SearchStats:
+    nodes_visited: int = 0
+    leaves_checked: int = 0
+    z_solved: int = 0
+    pruned: int = 0
+
+
+def _group_by_level(pool: Sequence[Request]) -> Tuple[List[int],
+                                                      Dict[int, List[Request]]]:
+    levels = sorted({r.n for r in pool})
+    groups = {lv: sorted([r for r in pool if r.n == lv], key=lambda r: r.rho_u)
+              for lv in levels}
+    return levels, groups
+
+
+def _annotate(env: EdgeEnv, reqs: Sequence[Request]) -> List[Request]:
+    """Attach cached per-request quantities used in the inner loops."""
+    cm = env.cost_model()
+    for r in reqs:
+        r.rho_u = comm.rho_min_up(env, r)        # type: ignore[attr-defined]
+        r.rho_d = comm.rho_min_down(env, r)      # type: ignore[attr-defined]
+        r.kv_tok = cm.kv_bytes_decode([r.n], env.s_max)   # decode KV bytes
+        r.dec_flops = cm.decode_flops(env.s_max, [r.n])
+    return list(reqs)
+
+
+class _Ctx:
+    """Precomputed environment quantities for incremental checks."""
+
+    def __init__(self, env: EdgeEnv):
+        self.env = env
+        cm = env.cost_model()
+        q = env.quant
+        self.weight_mem = q.alpha_w * cm.weight_bytes()
+        self.prefill_mem = q.alpha_a * cm.kv_bytes_prefill(env.s_max, 1)
+        self.alpha_a = q.alpha_a
+        self.prefill_flops = cm.prefill_flops(env.s_max, 1)
+        self.beta = q.beta
+
+
+def _search(ctx: _Ctx, levels: List[int],
+            groups: Dict[int, List[Request]], z: int,
+            stats: SearchStats, prune: bool, order_desc: bool
+            ) -> Optional[List[Request]]:
+    """DFS over count vectors (v_1 .. v_K), see module docstring."""
+    env = ctx.env
+    K = len(levels)
+    suffix_cap = [0] * (K + 1)
+    for k in range(K - 1, -1, -1):
+        suffix_cap[k] = suffix_cap[k + 1] + len(groups[levels[k]])
+
+    # static per-z terms
+    mem_base = ctx.weight_mem + ctx.prefill_mem * z
+    if mem_base > env.M:
+        return None
+    comp_base = ctx.beta * ctx.prefill_flops * z / env.C
+
+    chosen: List[Request] = []
+
+    def partial_violates(rho_u: float, rho_d: float, mem: float,
+                         dec: float, slack: float) -> bool:
+        if rho_u > 1.0 + 1e-12 or rho_d > 1.0 + 1e-12:
+            return True
+        if mem_base + mem > env.M + 1e-6:
+            return True
+        t = env.T_U + comp_base + ctx.beta * dec / env.C + env.T_D
+        return t > slack + 1e-12
+
+    def dfs(k: int, remaining: int, rho_u: float, rho_d: float,
+            mem: float, dec: float, slack: float) -> Optional[List[Request]]:
+        stats.nodes_visited += 1
+        if prune and partial_violates(rho_u, rho_d, mem, dec, slack):
+            stats.pruned += 1
+            return None
+        if remaining == 0:
+            stats.leaves_checked += 1
+            cand = list(chosen)
+            if _check(env, cand):
+                return cand
+            return None
+        if k == K:
+            return None
+        if prune and suffix_cap[k] < remaining:
+            stats.pruned += 1
+            return None
+        g = groups[levels[k]]
+        top = min(len(g), remaining)
+        counts = range(top, -1, -1) if order_desc else range(0, top + 1)
+        for v in counts:
+            sel = g[:v]
+            chosen.extend(sel)
+            hit = dfs(k + 1, remaining - v,
+                      rho_u + sum(r.rho_u for r in sel),
+                      rho_d + sum(r.rho_d for r in sel),
+                      mem + ctx.alpha_a * sum(r.kv_tok for r in sel),
+                      dec + sum(r.dec_flops for r in sel),
+                      min([slack] + [r.tau - r.t_w for r in sel]))
+            del chosen[len(chosen) - v:]
+            if hit is not None:
+                return hit
+        return None
+
+    return dfs(0, z, 0.0, 0.0, 0.0, 0.0, float("inf"))
+
+
+def _check(env: EdgeEnv, cand: List[Request]) -> bool:
+    """Constraints (2b)-(2e) on a complete leaf (authoritative oracle)."""
+    if sum(r.rho_u for r in cand) > 1.0 + 1e-12:
+        return False
+    if sum(r.rho_d for r in cand) > 1.0 + 1e-12:
+        return False
+    if not problem.memory_feasible(env, cand):
+        return False
+    return problem.latency_feasible(env, cand)
+
+
+def _z_upper_bound(env: EdgeEnv, pool: List[Request]) -> int:
+    """Cheap per-constraint bound on the max feasible batch size (sound:
+    each constraint is evaluated with its own most-favorable requests)."""
+    ctx = _Ctx(env)
+    n = len(pool)
+    # bandwidth bounds
+    z_u = _greedy_bound(sorted(r.rho_u for r in pool), 1.0)
+    z_d = _greedy_bound(sorted(r.rho_d for r in pool), 1.0)
+    # memory: weights + z*(prefill + cheapest decode KV)
+    kvs = sorted(r.kv_tok * ctx.alpha_a for r in pool)
+    z_m = 0
+    used = ctx.weight_mem
+    for kv in kvs:
+        if used + ctx.prefill_mem + kv > env.M:
+            break
+        used += ctx.prefill_mem + kv
+        z_m += 1
+    # latency: z*(prefill) + cheapest decode flops vs best slack
+    best_slack = max((r.tau - r.t_w for r in pool), default=0.0) \
+        - env.T_U - env.T_D
+    decs = sorted(r.dec_flops for r in pool)
+    z_t, tot = 0, 0.0
+    for dflops in decs:
+        tot += dflops
+        t = ctx.beta * (ctx.prefill_flops * (z_t + 1) + tot) / env.C
+        if t > best_slack:
+            break
+        z_t += 1
+    return max(0, min(n, z_u, z_d, z_m, z_t))
+
+
+def _greedy_bound(sorted_costs: List[float], budget: float) -> int:
+    tot, z = 0.0, 0
+    for c in sorted_costs:
+        tot += c
+        if tot > budget + 1e-12:
+            break
+        z += 1
+    return z
+
+
+def dftsp_schedule(env: EdgeEnv, requests: Sequence[Request],
+                   prune: bool = True, order_desc: bool = True,
+                   d_sweep: bool = True, fast_z_bound: bool = True,
+                   stats: Optional[SearchStats] = None
+                   ) -> Tuple[List[Request], SearchStats]:
+    """Run Algorithm 1.  Returns (optimal batch S, search stats).
+
+    ``prune=False, order_desc=False, fast_z_bound=False`` is the
+    brute-force benchmark of Table III (same solution, more nodes).
+    """
+    stats = stats or SearchStats()
+    pool = problem.filter_accuracy(env, requests)
+    if not pool:
+        return [], stats
+    pool = _annotate(env, pool)
+    ctx = _Ctx(env)
+    coeff = problem.P2Coefficients(env)
+
+    z_start = _z_upper_bound(env, pool) if fast_z_bound else len(pool)
+    for z in range(z_start, 0, -1):
+        ranked = sorted(pool, key=lambda r: coeff.tau_tilde(r, z),
+                        reverse=True)
+        d_values = range(z, len(pool) + 1) if d_sweep else [len(pool)]
+        for d in d_values:
+            F_d = ranked[:d]
+            levels, groups = _group_by_level(F_d)
+            hit = _search(ctx, levels, groups, z, stats, prune, order_desc)
+            if hit is not None:
+                stats.z_solved = z
+                return hit, stats
+    return [], stats

@@ -1,0 +1,115 @@
+"""Multi-LLM edge node (paper §II: "while Fig. 1 focuses on one LLM, our
+approach is adaptable for multiple LLMs").
+
+The EN hosts M quantized models sharing one memory pool, one compute
+budget and one OFDMA spectrum; each request targets a model
+(``Request.model_id`` via the ``tag`` trick below).  Within an epoch the
+scheduled batches execute sequentially in a fixed model order, so a
+request's latency includes every earlier model's batch compute (faithful
+to the single-compute-slot protocol of Fig. 2).
+
+``multi_dftsp`` schedules jointly: models are visited in
+shortest-batch-first order and each runs the paper's DFTSP against the
+RESIDUAL budgets (memory already committed by earlier models, bandwidth
+fractions consumed, compute time already queued).  This is a
+beyond-paper heuristic — per-model DFTSP is optimal for its residual
+subproblem, but the joint selection is not proven optimal (the joint
+problem adds knapsack coupling across models; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core import comm, problem
+from repro.core.dftsp import SearchStats, dftsp_schedule
+from repro.core.environment import EdgeEnv
+from repro.core.request import Request
+
+
+@dataclass(frozen=True)
+class MultiLLMEnv:
+    """Shared edge node hosting several (model, quant) deployments."""
+    envs: Dict[str, EdgeEnv]          # model_id -> single-model view
+    C: float                          # shared compute (FLOP/s)
+    M: float                          # shared memory (bytes)
+
+    @classmethod
+    def host(cls, envs: Dict[str, EdgeEnv]) -> "MultiLLMEnv":
+        any_env = next(iter(envs.values()))
+        return cls(envs={k: v.with_(C=any_env.C, M=any_env.M)
+                         for k, v in envs.items()},
+                   C=any_env.C, M=any_env.M)
+
+    def weight_bytes(self) -> float:
+        """Resident weights of every hosted model (always in memory)."""
+        return sum(e.quant.alpha_w * e.cost_model().weight_bytes()
+                   for e in self.envs.values())
+
+
+def tag(requests: Sequence[Request], model_id: str) -> List[Request]:
+    """Mark requests as targeting one hosted model."""
+    for r in requests:
+        r.model_id = model_id          # type: ignore[attr-defined]
+    return list(requests)
+
+
+def _kv_bytes(env: EdgeEnv, batch: Sequence[Request]) -> float:
+    cm = env.cost_model()
+    return env.quant.alpha_a * (
+        cm.kv_bytes_prefill(env.s_max, len(batch))
+        + cm.kv_bytes_decode([r.n for r in batch], env.s_max))
+
+
+def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request]
+                ) -> Tuple[Dict[str, List[Request]], SearchStats]:
+    """Joint schedule across hosted models on shared budgets."""
+    stats = SearchStats()
+    by_model: Dict[str, List[Request]] = {m: [] for m in menv.envs}
+    for r in requests:
+        mid = getattr(r, "model_id", None)
+        if mid in by_model:
+            by_model[mid].append(r)
+
+    # cheapest-expected-batch model first (its requests lose the least
+    # slack to queueing behind other models' compute)
+    order = sorted(menv.envs,
+                   key=lambda m: menv.envs[m].cost_model().weight_bytes())
+
+    mem_left = menv.M - menv.weight_bytes()
+    if mem_left < 0:
+        return {m: [] for m in menv.envs}, stats
+    rho_u_left = rho_d_left = 1.0
+    t_queued = 0.0
+    out: Dict[str, List[Request]] = {}
+
+    for mid in order:
+        env = menv.envs[mid]
+        pool = by_model[mid]
+        # residual-budget view: memory = own weights + the shared
+        # remainder (dftsp's (1c) re-subtracts the own-weight term), and
+        # earlier models' batch compute delays this batch exactly like a
+        # longer uplink slot (single compute queue, Fig. 2)
+        own_w = env.quant.alpha_w * env.cost_model().weight_bytes()
+        res_env = env.with_(M=own_w + max(mem_left, 0.0),
+                            T_U=env.T_U + t_queued)
+        sel, st = dftsp_schedule(res_env, pool)
+        stats.nodes_visited += st.nodes_visited
+        stats.leaves_checked += st.leaves_checked
+
+        # enforce the SHARED bandwidth budget (dftsp saw a full link)
+        kept: List[Request] = []
+        for r in sorted(sel, key=lambda r: comm.rho_min_up(env, r)):
+            ru, rd = comm.rho_min_up(env, r), comm.rho_min_down(env, r)
+            if ru <= rho_u_left and rd <= rho_d_left:
+                kept.append(r)
+                rho_u_left -= ru
+                rho_d_left -= rd
+        while kept and not problem.latency_feasible(res_env, kept):
+            kept.pop()                 # drop the tightest-slack members
+        out[mid] = kept
+        if kept:
+            mem_left -= _kv_bytes(env, kept)
+            t_queued += problem.batch_compute_time(env, kept)
+    stats.z_solved = sum(len(v) for v in out.values())
+    return out, stats

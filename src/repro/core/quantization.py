@@ -1,0 +1,72 @@
+"""Quantization model (paper §II-B.3).
+
+Each PTQ method is characterized by:
+  alpha_w / alpha_a — memory scale factors for weights / activations+KV,
+  beta            — computational-time scale,
+  dppl[model]     — perplexity differential (paper Table II + [10]).
+
+``f_accuracy`` maps dPPL to a service-accuracy score in [0,1]
+(monotonically decreasing, as the paper requires); a request is
+accuracy-feasible iff a_i <= f(dPPL).
+
+The paper treats alpha as a single factor on (m1 + m2); we keep separate
+weight/activation factors (W8A16 does NOT shrink the KV cache) and provide
+``alpha`` as the paper-faithful aggregate used by the reproduction benches.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class QuantMethod:
+    name: str
+    weight_bits: int
+    act_bits: int
+    beta: float                      # compute-time scale vs FP16
+    dppl: Dict[str, float] = field(default_factory=dict)
+    dppl_default: float = 0.1
+
+    @property
+    def alpha_w(self) -> float:
+        return self.weight_bits / 16.0
+
+    @property
+    def alpha_a(self) -> float:
+        return self.act_bits / 16.0
+
+    @property
+    def alpha(self) -> float:
+        """Paper-faithful single memory factor (dominated by weights)."""
+        return self.alpha_w
+
+    def delta_ppl(self, model: str) -> float:
+        return self.dppl.get(model, self.dppl_default)
+
+
+def f_accuracy(dppl: float) -> float:
+    """Monotonically decreasing accuracy score of the PPL differential."""
+    return math.exp(-dppl)
+
+
+# Paper Table II + [10] calibration.  W8A16 is the paper's default.
+_TABLE2_GPTQ = {"bloom-3b": 0.75, "bloom-7b1": 0.54, "opt-13b": 0.2}
+_TABLE2_ZQL = {"bloom-3b": 0.92, "bloom-7b1": 0.59, "opt-13b": 0.42}
+
+METHODS: Dict[str, QuantMethod] = {
+    "W16A16": QuantMethod("W16A16", 16, 16, beta=1.0, dppl_default=0.0),
+    "W8A16": QuantMethod("W8A16", 8, 16, beta=0.85, dppl_default=0.05,
+                         dppl={"bloom-3b": 0.05, "bloom-7b1": 0.04,
+                               "opt-13b": 0.03}),
+    "W8A8": QuantMethod("W8A8", 8, 8, beta=0.7, dppl_default=0.15),
+    "W4A16-GPTQ": QuantMethod("W4A16-GPTQ", 4, 16, beta=0.8,
+                              dppl=_TABLE2_GPTQ, dppl_default=0.6),
+    "W4A16-ZQL": QuantMethod("W4A16-ZQL", 4, 16, beta=0.75,
+                             dppl=_TABLE2_ZQL, dppl_default=0.7),
+}
+
+
+def get_method(name: str) -> QuantMethod:
+    return METHODS[name]

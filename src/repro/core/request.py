@@ -1,0 +1,57 @@
+"""User inference requests  <s_i, n_i, tau_i, a_i>  (paper §II)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+BYTES_PER_TOKEN = 2       # BPE token index, 2-byte (paper §IV)
+BITS_PER_TOKEN = 16
+
+
+@dataclass
+class Request:
+    rid: int
+    s: int                 # input prompt length (tokens)
+    n: int                 # maximum output length (tokens), one of the levels
+    tau: float             # latency requirement (seconds)
+    a: float               # required accuracy (in [0,1]; needs a <= f(dPPL))
+    h: float               # channel gain (amplitude)
+    arrival: float = 0.0   # arrival time (seconds)
+    t_w: float = 0.0       # waiting time at scheduling (seconds)
+
+
+@dataclass
+class RequestGenerator:
+    """Poisson arrivals with the paper's §IV marginals."""
+    rate: float                            # requests / second
+    lengths: tuple = (128, 256, 512)       # input & output token levels
+    tau_range: tuple = (0.5, 2.0)
+    acc_range: tuple = (0.0, 1.0)
+    path_loss: float = 1e-3                # Rayleigh fading scale (power)
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False, default=None)
+    _next_id: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def within(self, t0: float, t1: float) -> list:
+        """Generate arrivals in [t0, t1)."""
+        rng = self._rng
+        n = rng.poisson(self.rate * (t1 - t0))
+        times = np.sort(rng.uniform(t0, t1, size=n))
+        out = []
+        for t in times:
+            # Rayleigh amplitude with E[h^2] = path_loss
+            h = float(rng.rayleigh(scale=np.sqrt(self.path_loss / 2.0)))
+            out.append(Request(
+                rid=self._next_id,
+                s=int(rng.choice(self.lengths)),
+                n=int(rng.choice(self.lengths)),
+                tau=float(rng.uniform(*self.tau_range)),
+                a=float(rng.uniform(*self.acc_range)),
+                h=h,
+                arrival=float(t)))
+            self._next_id += 1
+        return out

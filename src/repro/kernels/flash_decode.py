@@ -1,0 +1,113 @@
+"""Pallas TPU flash-decoding kernel for the auto-regressive stage.
+
+The paper's t_A (decode latency) is memory-bound: one token's query reads
+the whole KV cache.  TPU-native design (DESIGN.md §3): the cache streams
+HBM->VMEM in (block_s, dh) tiles; an online-softmax accumulator (running
+max m, denominator l, weighted sum acc) lives in VMEM scratch across the
+sequence-block grid steps, so each KV byte is read exactly once.  GQA
+grouping puts the G = nh/nkv query heads of one KV head together in the
+tile so the MXU sees (G, dh) x (dh, block_s) matmuls.
+
+Grid: (B, nkv, W/block_s), sequence innermost ("arbitrary").  The slot
+mask (slot < n_valid) handles both partially-filled caches and the rolling
+sliding-window layout (validity is a count, order is irrelevant under
+softmax since rope was applied before caching).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BS = 512
+NEG = -1e30
+
+
+def _decode_kernel(nv_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, n_s: int, block_s: int):
+    """One (batch, kv-head) pair; grid axis 2 walks the sequence blocks.
+
+    q_ref:  (1, 1, G, dh)   queries for this kv head's group
+    k_ref:  (1, block_s, 1, dh)
+    v_ref:  (1, block_s, 1, dh)
+    nv_ref: (B,) int32      valid-slot counts (scalar-prefetch, SMEM);
+                            indexed by the batch grid position
+    o_ref:  (1, 1, G, dh)
+    scratch: m/l (G, 128), acc (G, dh)  [f32]
+    """
+    ss = pl.program_id(2)
+
+    @pl.when(ss == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, dh = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32) * (1.0 / (dh ** 0.5))   # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)                       # (bs, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)                       # (bs, dh)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, bs)
+    slot = ss * block_s + jax.lax.broadcasted_iota(jnp.int32, (G, block_s), 1)
+    s = jnp.where(slot < nv_ref[pl.program_id(0)], s, NEG)
+
+    m_prev = m_ref[:, :1]                                        # (G, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)                   # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                       # (G, bs)
+    alpha = jnp.exp(m_prev - m_new)                              # (G, 1)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ss == n_s - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 n_valid: jax.Array, *, block_s: int = DEFAULT_BS,
+                 interpret: bool = False) -> jax.Array:
+    """GQA decode attention.  q: (B, nh, dh); k/v: (B, W, nkv, dh);
+    n_valid: scalar or (B,) valid-slot count.  Returns (B, nh, dh)."""
+    B, nh, dh = q.shape
+    W, nkv = k.shape[1], k.shape[2]
+    G = nh // nkv
+    block_s = min(block_s, W)
+    assert W % block_s == 0, (W, block_s)
+    n_s = W // block_s
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+
+    qg = q.reshape(B, nkv, G, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, s, nv: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda b, h, s, nv: (b, s, h, 0)),
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda b, h, s, nv: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, s, nv: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, n_s=n_s, block_s=block_s),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nkv, G, dh), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(nv, qg, k, v)
+    return out.reshape(B, nh, dh)

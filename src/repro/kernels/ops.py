@@ -1,0 +1,92 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+These handle shape padding (kernels need block-divisible dims), dtype
+plumbing, and the interpret-mode switch (CPU validation; TPU is the
+target).  Model code calls only these.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_decode as _fd
+from repro.kernels import quant_matmul as _qm
+from repro.quant.ptq import QTensor
+
+# CPU containers run kernels in interpret mode; on TPU this is False.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m", "block_n",
+                                             "block_k"))
+def quant_matmul(x: jax.Array, q: jax.Array, scale: jax.Array,
+                 bits: int = 8, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 256) -> jax.Array:
+    """x (..., K) @ dequant(q, scale) -> (..., N).  Pads to block multiples."""
+    *lead, K = x.shape
+    N = scale.shape[0]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, K)
+
+    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    x2 = _pad_to(x2, 0, bm)
+    x2 = _pad_to(x2, 1, block_k)
+    Kp = x2.shape[1]
+    if bits == 4:
+        qp = _pad_to(q, 0, block_k // 2)
+        assert qp.shape[0] == Kp // 2, (qp.shape, Kp)
+    else:
+        qp = _pad_to(q, 0, block_k)
+    qp = _pad_to(qp, 1, block_n)
+    sp = _pad_to(scale.reshape(-1), 0, block_n)
+
+    out = _qm.quant_matmul(x2, qp, sp, bits, block_m=bm, block_n=block_n,
+                           block_k=block_k, interpret=INTERPRET)
+    return out[:M, :N].reshape(*lead, N)
+
+
+def qmatmul(x: jax.Array, w) -> jax.Array:
+    """Dispatch on weight type: QTensor -> Pallas kernel; array -> XLA."""
+    if isinstance(w, QTensor):
+        return quant_matmul(x, w.q, w.scale, w.bits)
+    return x @ w
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 n_valid, block_s: int = 512) -> jax.Array:
+    """GQA decode attention: q (B, nh, dh) against k/v (B, W, nkv, dh).
+
+    Pads W up to a block multiple (padded slots are masked by n_valid),
+    dh up to 128 lanes.
+    """
+    B, nh, dh = q.shape
+    W = k.shape[1]
+    bs = min(block_s, max(128, 1 << (W - 1).bit_length()))
+    k = _pad_to(k, 1, bs)
+    v = _pad_to(v, 1, bs)
+    if dh % 128:
+        # kernel scales by 1/sqrt(padded dh); compensate so the net
+        # softmax scale stays 1/sqrt(true dh)
+        dh_p = dh + (128 - dh % 128)
+        q = q * jnp.asarray((dh_p / dh) ** 0.5, q.dtype)
+        q = _pad_to(q, 2, 128)
+        k = _pad_to(k, 3, 128)
+        v = _pad_to(v, 3, 128)
+    out = _fd.flash_decode(q, k, v, jnp.asarray(n_valid, jnp.int32),
+                           block_s=bs, interpret=INTERPRET)
+    return out[..., :dh]

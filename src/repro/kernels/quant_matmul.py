@@ -1,0 +1,108 @@
+"""Pallas TPU dequant-matmul kernel (W8A16 / W4A16).
+
+The paper's quantization saves HBM capacity and bandwidth; the compute
+cost is re-expanding the low-bit weights.  The TPU-native design
+(DESIGN.md §3): int8/int4 weights stream HBM->VMEM in (block_k, block_n)
+tiles, are dequantized *in VMEM* (vector unit), and feed the MXU as f32
+tiles — so the HBM side sees alpha x fewer bytes while the MXU sees
+ordinary matmuls.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") so a VMEM scratch
+accumulator carries partial sums across K steps; the f32 result is cast
+and written once on the last K step.
+
+int4: weights arrive packed two-rows-per-int8 (quant/ptq.py layout:
+row 2i -> low nibble, row 2i+1 -> high nibble), so the weight BlockSpec
+tiles (bk/2, bn) and the kernel unpacks to (bk, bn) with vector ops —
+the packed form is what lives in HBM/VMEM, which is the point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+
+def _mm_kernel_int8(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile, accumulating over K blocks."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _mm_kernel_int4(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = q_ref[...]                                   # (bk/2, bn) int8
+    lo = (packed & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    bk2, bn = packed.shape
+    q = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)  # rows interleaved
+    w = q.astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_matmul(x: jax.Array, q: jax.Array, scale: jax.Array,
+                 bits: int = 8, *, block_m: int = DEFAULT_BM,
+                 block_n: int = DEFAULT_BN, block_k: int = DEFAULT_BK,
+                 interpret: bool = False) -> jax.Array:
+    """x (M,K) @ dequant(q (K,N) or packed (K/2,N), scale (N,)) -> (M,N).
+
+    M, K, N must be divisible by the block sizes (ops.py pads).
+    """
+    M, K = x.shape
+    N = scale.shape[0]
+    if bits == 4:
+        assert q.shape == (K // 2, N), (q.shape, K, N)
+        assert block_k % 2 == 0
+    else:
+        assert q.shape == (K, N), (q.shape, K, N)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, \
+        (M, N, K, block_m, block_n, block_k)
+    n_k = K // block_k
+
+    kern = _mm_kernel_int4 if bits == 4 else _mm_kernel_int8
+    wk = block_k // 2 if bits == 4 else block_k
+    return pl.pallas_call(
+        functools.partial(kern, n_k=n_k),
+        grid=(M // block_m, N // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((wk, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, q, scale.reshape(1, N).astype(jnp.float32))

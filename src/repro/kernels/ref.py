@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x: jax.Array, q: jax.Array, scale: jax.Array,
+                     bits: int = 8) -> jax.Array:
+    """x (M,K) @ dequant(q, scale) -> (M,N) in x.dtype.
+
+    q: int8 (K,N) for bits=8, packed (K/2,N) for bits=4 (see quant/ptq.py);
+    scale: (N,) float32 per-output-channel.
+    """
+    if bits == 4:
+        from repro.quant.ptq import unpack_int4
+        q = unpack_int4(q)
+    w = q.astype(jnp.float32) * scale.astype(jnp.float32)
+    out = x.astype(jnp.float32) @ w
+    return out.astype(x.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     n_valid: jax.Array) -> jax.Array:
+    """GQA decode attention oracle.
+
+    q: (B, nh, dh) current-step queries (rope already applied);
+    k, v: (B, W, nkv, dh) slot caches; n_valid: scalar or (B,) count of
+    valid cache slots.  Returns (B, nh, dh) in q.dtype.
+    """
+    B, nh, dh = q.shape
+    W, nkv = k.shape[1], k.shape[2]
+    G = nh // nkv
+    qf = q.reshape(B, nkv, G, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * scale    # (B,nkv,G,W)
+    nv = jnp.broadcast_to(jnp.asarray(n_valid), (B,))
+    mask = jnp.arange(W)[None, :] < nv[:, None]                # (B,W)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, vf)
+    return out.reshape(B, nh, dh).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Production meshes (defined as functions so importing this module never
+touches jax device state — device count locks on first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever the current host offers (smoke tests / examples)."""
+    n = jax.device_count()
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the batch dim shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

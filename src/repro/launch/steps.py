@@ -1,0 +1,291 @@
+"""Sharded step functions: the bridge between models and meshes.
+
+``param_specs`` assigns every parameter leaf a PartitionSpec from
+name-based tensor-parallel rules (Megatron layout adapted per family);
+``batch_specs`` / ``cache_specs`` shard activations and KV caches.  All
+rules are divisibility-aware: a dim that doesn't divide its mesh axes
+falls back to replicated (e.g. 56 heads on a 16-way model axis).
+
+Step builders return (fn, in_shardings, out_shardings) ready for
+``jax.jit(fn, in_shardings=...).lower(...)`` — used by the real launchers
+(train.py / serve.py) and the dry-run alike.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.api import Model, build_model
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.utils.remat import remat_scan
+from repro.utils.sharding import axis_ctx_for_mesh
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# last-dim sharded on "model" (column parallel)
+_COL_KEYS = frozenset({
+    "wq", "wk", "wv", "w1", "w3", "w_up", "w_gates", "ffn_w1", "ffn_w3",
+    "in_proj", "lm_head", "embed", "wi", "wf",
+})
+# dim -2 sharded on "model" (row parallel; output stays unsharded pre-psum)
+_ROW_KEYS = frozenset({"wo", "w2", "w_down", "ffn_w2", "out_proj"})
+# MoE stacked expert weights: expert axis is dim -3 for w1/w3 (E, dm, df)
+_MOE_KEYS = frozenset({"w1", "w2", "w3"})
+
+
+def _leaf_key(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", last)))
+
+
+def _path_has(path, name: str) -> bool:
+    return any(str(getattr(e, "key", "")) == name for e in path)
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % mesh.shape[axis] == 0
+
+
+def _spec_for(path, leaf, mesh: Mesh, fsdp: bool) -> P:
+    key = _leaf_key(path)
+    nd = leaf.ndim
+    entries = [None] * nd
+    if nd >= 2:
+        if _path_has(path, "moe") and key in _MOE_KEYS \
+                and _divisible(leaf.shape[nd - 3], mesh, "model"):
+            # stacked (L, E, dm, df) or unstacked (E, dm, df):
+            # expert-parallel over the E axis
+            entries[nd - 3] = "model"
+        elif key in _COL_KEYS and _divisible(leaf.shape[-1], mesh, "model"):
+            entries[-1] = "model"
+        elif key in _ROW_KEYS and _divisible(leaf.shape[-2], mesh, "model"):
+            entries[-2] = "model"
+        elif _path_has(path, "moe") and key in _MOE_KEYS:
+            # experts don't divide: fall back to hidden-dim tensor parallel
+            if key == "w2" and _divisible(leaf.shape[-2], mesh, "model"):
+                entries[-2] = "model"
+            elif _divisible(leaf.shape[-1], mesh, "model"):
+                entries[-1] = "model"
+    if fsdp and nd >= 2:
+        # ZeRO-3 style: storage additionally sharded over 'data' on the
+        # last still-replicated divisible dim (XLA gathers per layer-slice)
+        for i in range(nd - 1, -1, -1):
+            if entries[i] is None and leaf.shape[i] > 1 \
+                    and _divisible(leaf.shape[i], mesh, "data"):
+                entries[i] = "data"
+                break
+    return P(*entries)
+
+
+def param_specs(model: Model, mesh: Mesh, fsdp: bool = True) -> Any:
+    """PartitionSpec tree for the model's params (via eval_shape; no alloc).
+
+    ``fsdp=True`` (default) additionally shards weight storage over the
+    'data' axis — required for the 100B+ archs whose TP=16 shard alone
+    (~15 GB) would not leave HBM headroom, and how real v5e deployments
+    of that scale store weights.
+    """
+    shapes = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, mesh, fsdp), shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache sharding
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_size(mesh: Mesh) -> int:
+    out = 1
+    for a in _batch_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                specs: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, P]:
+    """Shard every input's batch dim over (pod, data) when divisible."""
+    axes = _batch_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        b = v.shape[0]
+        if axes and b % _batch_size(mesh) == 0:
+            out[k] = P(axes, *([None] * (v.ndim - 1)))
+        else:
+            out[k] = P(*([None] * v.ndim))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shapes: Any,
+                batch: int, seq_axis: Optional[str] = "model") -> Any:
+    """Shard cache leaves: the batch dim over (pod,data), and the slot /
+    sequence dim (>= 1024 slots) over ``seq_axis``.
+
+    The batch dim is identified by its exact size (init_cache(batch, ...)
+    builds every leaf with it); the slot dim is the first large divisible
+    dim after it.  32k-slot x 128-request caches are the dominant serving
+    footprint — slot sharding is what makes decode_32k fit (1a:1 with the
+    paper's m2 memory terms, just distributed).
+    """
+    axes = _batch_axes(mesh)
+    bsz = _batch_size(mesh)
+
+    def spec(leaf):
+        nd = leaf.ndim
+        entries = [None] * nd
+        start = 0
+        if batch > 1:
+            for i, d in enumerate(leaf.shape):
+                if d == batch and axes and d % bsz == 0:
+                    entries[i] = axes
+                    start = i + 1
+                    break
+        if seq_axis:
+            for i in range(start, nd):
+                d = leaf.shape[i]
+                if (entries[i] is None and d >= 1024
+                        and d % mesh.shape[seq_axis] == 0):
+                    entries[i] = seq_axis
+                    break
+        return P(*entries)
+
+    return jax.tree.map(spec, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def make_train_step_fn(model: Model, opt_cfg: Optional[AdamWConfig] = None,
+                       microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` runs gradient accumulation over a lax.scan of
+    batch slices: activation peak scales with B/microbatches while the
+    optimizer step still sees the full-batch gradient (§Perf lever for
+    the activation-bound train shapes).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            # statically unrolled (a scanned microbatch axis trips GSPMD's
+            # gather partitioner when the embedding is FSDP-sharded)
+            n = microbatches
+            grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            loss, metrics = 0.0, None
+            for i in range(n):
+                mb = jax.tree.map(
+                    lambda v: v[i * (v.shape[0] // n):
+                                (i + 1) * (v.shape[0] // n)], batch)
+                (l, metrics), g = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, mb)
+                grads = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / n, grads, g)
+                loss = loss + l / n
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, opt_state,
+                                               params)
+        return new_params, new_opt, {**metrics, **om}
+
+    return step
+
+
+def make_prefill_fn(model: Model, cache_len: int):
+    def step(params, batch):
+        return model.prefill(params, batch, cache_len)
+    return step
+
+
+def make_decode_fn(model: Model, pos: int):
+    """One serve_step: decode a single token at position ``pos`` against
+    the full cache (the dry-run's decode shapes)."""
+    def step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, jnp.int32(pos))
+    return step
+
+
+def build_step(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               opt_cfg: Optional[AdamWConfig] = None,
+               seq_shard_decode: bool = False,
+               microbatches: int = 1):
+    """Assemble (fn, example_args, in_shardings, out_shardings) for one
+    (arch x shape) pair on ``mesh``.  Everything is ShapeDtypeStructs —
+    nothing is allocated.
+    """
+    model = build_model(arch_cfg)
+    pspecs = param_specs(model, mesh)
+    p_shapes = jax.eval_shape(model.init,
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+    in_specs = model.input_specs(shape)
+    bspecs = batch_specs(arch_cfg, shape, mesh, in_specs)
+
+    if shape.kind == "train":
+        fn = make_train_step_fn(model, opt_cfg, microbatches=microbatches)
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        opt_specs = type(opt_shapes)(
+            step=P(), mu=pspecs, nu=pspecs)
+        args = (p_shapes, opt_shapes, in_specs)
+        in_sh = (shardings(mesh, pspecs), shardings(mesh, opt_specs),
+                 shardings(mesh, bspecs))
+        out_sh = None       # propagate from inputs
+        return fn, args, in_sh, out_sh, (0, 1)      # donate params + opt
+
+    B = shape.global_batch
+    cache_shapes = jax.eval_shape(
+        functools.partial(model.init_cache, B, shape.seq_len))
+    cspecs = cache_specs(arch_cfg, mesh, cache_shapes, batch=B)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_fn(model, cache_len=shape.seq_len)
+        args = (p_shapes, in_specs)
+        in_sh = (shardings(mesh, pspecs), shardings(mesh, bspecs))
+        logit_spec = P(_batch_axes(mesh) or None, None) \
+            if B % max(_batch_size(mesh), 1) == 0 else P(None, None)
+        out_sh = (NamedSharding(mesh, logit_spec), shardings(mesh, cspecs))
+        return fn, args, in_sh, out_sh, ()
+
+    # decode: one token against a seq_len cache
+    fn = make_decode_fn(model, pos=shape.seq_len - 1)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = batch_specs(arch_cfg, shape, mesh, {"tokens": tok})["tokens"]
+    args = (p_shapes, cache_shapes, tok)
+    in_sh = (shardings(mesh, pspecs), shardings(mesh, cspecs),
+             NamedSharding(mesh, tok_spec))
+    return fn, args, in_sh, None, (1,)              # donate the cache
+
+
+def lower_step(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               remat: Optional[bool] = None, **kw):
+    """Lower one (arch x shape x mesh) combination (dry-run unit)."""
+    fn, args, in_sh, out_sh, donate = build_step(arch_cfg, shape, mesh, **kw)
+    if remat is None:
+        remat = shape.kind == "train"    # layer remat only matters under AD
+    with mesh:
+        with axis_ctx_for_mesh(mesh, batch=("pod", "data"), model="model"):
+            with remat_scan(remat):
+                jitted = jax.jit(fn, in_shardings=in_sh,
+                                 out_shardings=out_sh,
+                                 donate_argnums=donate)
+                return jitted.lower(*args)

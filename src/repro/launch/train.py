@@ -1,0 +1,86 @@
+"""Distributed training launcher.
+
+Runs the sharded train step (launch/steps.py) on whatever mesh the host
+offers — the same step function the dry-run lowers for the production
+meshes, so a passing dry-run config is exactly what this would execute on
+a real pod.
+
+Usage:
+  python -m repro.launch.train --arch olmo-1b --steps 100 \
+      --batch 32 --seq 256 --reduced        # host-size run
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (make_train_step_fn, param_specs, shardings)
+from repro.models.api import build_model
+from repro.train.data import SyntheticLM
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.utils.remat import remat_scan
+from repro.utils.sharding import axis_ctx_for_mesh
+
+REDUCED = dict(n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+               d_ff=512, vocab=2048)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (host-scale smoke)")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        red = dict(REDUCED)
+        if cfg.is_moe:
+            red["d_ff"] = 256
+        red["n_kv_heads"] = min(cfg.n_kv_heads, red["n_heads"])
+        cfg = cfg.scaled(**red)
+    model = build_model(cfg)
+    mesh = make_host_mesh(model=args.model_parallel)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps)
+    step_fn = make_train_step_fn(model, opt_cfg)
+
+    pspecs = param_specs(model, mesh, fsdp=False)
+    data = SyntheticLM(cfg, args.batch, args.seq)
+
+    with mesh:
+        with axis_ctx_for_mesh(mesh):
+            with remat_scan(True):
+                params = jax.jit(
+                    model.init,
+                    out_shardings=shardings(mesh, pspecs))(jax.random.key(0))
+                opt = adamw_init(params)
+                step = jax.jit(step_fn, donate_argnums=(0, 1))
+                t0 = time.time()
+                for i in range(args.steps):
+                    batch = {k: jnp.asarray(v)
+                             for k, v in data.next_batch().items()}
+                    params, opt, metrics = step(params, opt, batch)
+                    if i % 10 == 0 or i == args.steps - 1:
+                        print(f"step {i:5d} loss={float(metrics['loss']):.4f}"
+                              f" lr={float(metrics['lr']):.2e}"
+                              f" ({time.time() - t0:.1f}s)")
+    if args.checkpoint:
+        from repro.train import checkpoint as ck
+        ck.save(args.checkpoint, (params, opt))
+        print(f"saved {args.checkpoint}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

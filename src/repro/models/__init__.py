@@ -1,0 +1,2 @@
+"""Model zoo: pure-JAX decoder stacks for every assigned architecture."""
+from repro.models.api import Model, build_model  # noqa: F401

@@ -1,0 +1,72 @@
+"""Model API: a uniform functional interface over all architecture families.
+
+Every family module builds a :class:`Model` whose members are plain
+functions (jit/pjit-able, scan-over-layers inside).  ``build_model`` is the
+single entry point used by the launcher, serving engine, tests and dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+Params = Any
+Cache = Any
+Batch = Dict[str, jax.Array]
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    forward: Callable[[Params, Batch], jax.Array]        # logits (B,S,Vp)
+    loss_fn: Callable[[Params, Batch], Any]              # (loss, metrics)
+    prefill: Callable[[Params, Batch], Any]              # (last logits, cache)
+    decode_step: Callable[[Params, Cache, jax.Array, jax.Array], Any]
+    init_cache: Callable[[int, int], Cache]              # (batch, cache_len)
+    input_specs: Callable[[ShapeConfig], Batch]          # ShapeDtypeStructs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        return transformer.make_model(cfg)
+    if cfg.family == "audio":
+        from repro.models import whisper
+        return whisper.make_model(cfg)
+    if cfg.family == "ssm":
+        from repro.models import xlstm
+        return xlstm.make_model(cfg)
+    if cfg.family == "hybrid":
+        from repro.models import zamba
+        return zamba.make_model(cfg)
+    raise ValueError(f"no model for family {cfg.family!r}")
+
+
+def token_specs(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int,
+                  mask: jax.Array | None = None):
+    """Mean CE over valid tokens; logits (B,S,Vp) with Vp >= vocab (padded
+    vocab columns masked out)."""
+    logits = logits.astype(jnp.float32)
+    Vp = logits.shape[-1]
+    if Vp > vocab:
+        pad = jnp.arange(Vp) >= vocab
+        logits = jnp.where(pad[None, None, :], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction, NOT take_along_axis: gathering along a
+    # vocab-parallel dim would force GSPMD to all-gather the full logits
+    onehot = jax.nn.one_hot(labels, Vp, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

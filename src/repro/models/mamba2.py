@@ -1,0 +1,231 @@
+"""Mamba2 (SSD) block — TPU-native chunked implementation.
+
+The selective-state-space recurrence is computed with the chunked SSD
+algorithm (Dao & Gu, 2024): the sequence is split into chunks of length Q;
+within-chunk interactions are dense matmuls (MXU-friendly), across-chunk
+state is carried by a short ``lax.scan`` over chunks.  This is the TPU
+adaptation called out in DESIGN.md §3 — a step-by-step recurrent scan would
+serialize 32k+ tiny matmuls, while the chunked form is matmul-bound.
+
+``ssd_reference`` is the O(T) naive scan oracle used by property tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.utils.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim P, state N)."""
+    d_inner = cfg.ssm.expand * cfg.d_model
+    P = cfg.ssm.head_dim
+    return d_inner, d_inner // P, P, cfg.ssm.d_state
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    d_inner, _, _, N = dims(cfg)
+    return d_inner + 2 * N          # x, B, C share the causal conv
+
+
+def init_block(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    dm = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * N + H          # z, x, B, C, dt
+    return {
+        "in_proj": common.dense_init(ks[0], (dm, d_proj), 0, dtype),
+        "conv_w": common.dense_init(ks[1], (cfg.ssm.conv_width,
+                                            conv_channels(cfg)), 0, dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": common.dense_init(ks[2], (d_inner, dm), 0, dtype),
+        "norm": common.make_norm_params(cfg, ks[3], dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, H, P, N = dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(w: jax.Array, xBC: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, width K.  xBC: (B, T, C); state: (B, K-1, C)
+    carries the last K-1 inputs for streaming decode.
+    Returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    xpad = jnp.concatenate([state, xBC], axis=1)
+    out = sum(xpad[:, i:i + xBC.shape[1]] * w[i][None, None]
+              for i in range(K))
+    new_state = xpad[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(out), new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decays -> (..., Q, Q) with [l, s] = sum_{s<j<=l} a_j,
+    -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: jax.Array | None = None):
+    """Chunked SSD.
+
+    x: (B, T, H, P); dt: (B, T, H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B, T, N).  Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    Bb, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    T0 = T
+    if T % Q:
+        # pad with identity steps (dt=0 => decay=1, zero input): state is
+        # untouched and the padded outputs are sliced off below.
+        pad = Q - T % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        T = T + pad
+    nc = T // Q
+
+    a = dt * A[None, None]                       # (B,T,H) log-decay
+    xdt = x * dt[..., None]                      # input * step
+    # reshape into chunks
+    ac = a.reshape(Bb, nc, Q, H).transpose(0, 1, 3, 2)       # (B,nc,H,Q)
+    xc = xdt.reshape(Bb, nc, Q, H, P)
+    Bc = Bm.reshape(Bb, nc, Q, N)
+    Cc = Cm.reshape(Bb, nc, Q, N)
+
+    L = jnp.exp(_segsum(ac))                                  # (B,nc,H,Q,Q)
+    # intra-chunk (diagonal block) output
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        Cc.astype(jnp.float32), Bc.astype(jnp.float32),
+                        L, xc.astype(jnp.float32))
+    # per-chunk injected state
+    a_cum = jnp.cumsum(ac, axis=-1)                           # (B,nc,H,Q)
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)           # (B,nc,H,Q)
+    chunk_states = jnp.einsum("bcsn,bchs,bcshp->bchpn",
+                              Bc.astype(jnp.float32), decay_to_end,
+                              xc.astype(jnp.float32))         # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(a_cum[..., -1])                     # (B,nc,H)
+
+    def scan_body(state, inp):
+        st_c, dec_c = inp                                     # (B,H,P,N),(B,H)
+        out_state = state                                     # state BEFORE chunk
+        new_state = state * dec_c[..., None, None] + st_c
+        return new_state, out_state
+
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_body, init_state.astype(jnp.float32),
+        (chunk_states.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,P,N)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(a_cum)                              # (B,nc,H,Q)
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp",
+                       Cc.astype(jnp.float32), state_decay, prev_states)
+    y = (y_diag + y_off).reshape(Bb, T, H, P)[:, :T0]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_reference(x, dt, A, Bm, Cm, init_state=None):
+    """Naive per-step recurrence oracle (float32)."""
+    Bb, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)                              # (B,H)
+        state = state * decay[..., None, None] \
+            + jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+def block_forward(cfg: ModelConfig, p: Params, u: jax.Array,
+                  collect_state: bool = False):
+    """Full-sequence Mamba2 block (pre-norm, residual outside).
+
+    u: (B, T, D).  Returns (out (B,T,D), state | None) where state =
+    {"ssm": (B,H,P,N), "conv": (B,K-1,C)} at the end of the sequence.
+    """
+    d_inner, H, P, N = dims(cfg)
+    B, T, _ = u.shape
+    proj = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, conv_state = _causal_conv(p["conv_w"], xBC)
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    x = constrain(x.reshape(B, T, H, P), "batch", None, "model", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, final = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm.chunk)
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, T, d_inner)
+    y = common.apply_norm("rmsnorm", p["gate_norm"],
+                          y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    out = y @ p["out_proj"]
+    out = constrain(out, "batch", None, None)
+    state = {"ssm": final, "conv": conv_state} if collect_state else None
+    return out, state
+
+
+def block_decode(cfg: ModelConfig, p: Params, u: jax.Array, state):
+    """Single-token step.  u: (B, 1, D); state per block_forward."""
+    d_inner, H, P, N = dims(cfg)
+    B = u.shape[0]
+    proj = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, conv_state = _causal_conv(p["conv_w"], xBC, state["conv"])
+    x, Bm, Cm = jnp.split(xBC[:, 0], [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B, H, P).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A[None])                              # (B,H)
+    ssm = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", x * dt1[..., None], Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm.astype(jnp.float32))
+    y = y + x * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(u.dtype)
+    y = common.apply_norm("rmsnorm", p["gate_norm"],
+                          y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    out = y @ p["out_proj"]
+    return constrain(out, "batch", None, None), {"ssm": ssm, "conv": conv_state}
+
+
+def state_specs(cfg: ModelConfig, batch: int):
+    d_inner, H, P, N = dims(cfg)
+    K = cfg.ssm.conv_width
+    return {"ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, conv_channels(cfg)),
+                              jnp.dtype(cfg.dtype))}

@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder transformer (audio family).
+
+The mel-spectrogram + conv1d feature extractor is a STUB (assignment
+carve-out): ``audio_embeds`` of shape (B, n_frames, d_model) arrive
+precomputed.  The encoder is a bidirectional transformer over frames; the
+decoder is a causal transformer with cross-attention to the encoder output.
+
+Decode cache = {self-attn slot caches (L,B,W,nkv,dh), static cross-attn k/v
+(L,B,F,nkv,dh)} — cross k/v are computed once at prefill.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import common
+from repro.models.api import Model, cross_entropy
+from repro.utils.remat import maybe_remat
+from repro.utils.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg): return jnp.dtype(cfg.dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    Vp = cfg.vocab_padded()
+
+    def enc_layer(lkey):
+        ka, kf, kn = jax.random.split(lkey, 3)
+        return {"attn": common.make_attn_params(cfg, ka, dt),
+                "ffn": common.make_ffn_params(cfg, kf, dt),
+                "norm1": common.make_norm_params(cfg, kn, dt),
+                "norm2": common.make_norm_params(cfg, kn, dt)}
+
+    def dec_layer(lkey):
+        ka, kx, kf, kn = jax.random.split(lkey, 4)
+        return {"attn": common.make_attn_params(cfg, ka, dt),
+                "xattn": common.make_attn_params(cfg, kx, dt),
+                "ffn": common.make_ffn_params(cfg, kf, dt),
+                "norm1": common.make_norm_params(cfg, kn, dt),
+                "norm2": common.make_norm_params(cfg, kn, dt),
+                "norm3": common.make_norm_params(cfg, kn, dt)}
+
+    return {
+        "embed": common.embed_init(ks[0], (Vp, cfg.d_model), dt),
+        "enc_layers": jax.vmap(enc_layer)(
+            jax.random.split(ks[1], cfg.encdec.n_enc_layers)),
+        "dec_layers": jax.vmap(dec_layer)(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "enc_norm": common.make_norm_params(cfg, ks[3], dt),
+        "final_norm": common.make_norm_params(cfg, ks[4], dt),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, audio_embeds: jax.Array
+           ) -> jax.Array:
+    x = constrain(audio_embeds.astype(_dtype(cfg)), "batch", None, None)
+    B, F, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def body(x, lp):
+        h = common.apply_norm(cfg.norm, lp["norm1"], x)
+        x = x + common.attention_block(lp["attn"], cfg, h, positions,
+                                       bidirectional=True)
+        h = common.apply_norm(cfg.norm, lp["norm2"], x)
+        return x + common.ffn_apply(lp["ffn"], cfg, h), None
+
+    x, _ = jax.lax.scan(maybe_remat(body), x, params["enc_layers"])
+    return common.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _cross_attend(lp: Params, cfg: ModelConfig, h: jax.Array,
+                  xk: jax.Array, xv: jax.Array) -> jax.Array:
+    """h: (B,S,D) queries; xk/xv: (B,F,nkv,dh) precomputed encoder k/v."""
+    B, S, _ = h.shape
+    q = (h @ lp["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    out = common.gqa_attention(q, xk, xv, mask=None)
+    out = out.reshape(B, S, cfg.n_heads * cfg.d_head) @ lp["wo"]
+    return constrain(out, "batch", None, None)
+
+
+def _cross_kv(lp: Params, cfg: ModelConfig, enc: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    B, F, _ = enc.shape
+    k = (enc @ lp["wk"]).reshape(B, F, cfg.n_kv_heads, cfg.d_head)
+    v = (enc @ lp["wv"]).reshape(B, F, cfg.n_kv_heads, cfg.d_head)
+    return k, v
+
+
+def _decoder(cfg: ModelConfig, params: Params, tokens: jax.Array,
+             enc: jax.Array, collect_cache: bool, W: int = 0):
+    """Teacher-forced decoder pass.  Returns (hidden, cache | None)."""
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", None, None)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        h = common.apply_norm(cfg.norm, lp["norm1"], x)
+        q, k, v = common.qkv_proj(lp["attn"], cfg, h, positions)
+        att = common.chunked_causal_attention(q, k, v)
+        att = att.reshape(B, S, cfg.n_heads * cfg.d_head) @ lp["attn"]["wo"]
+        x = x + constrain(att, "batch", None, None)
+        h = common.apply_norm(cfg.norm, lp["norm2"], x)
+        x = x + _cross_attend(lp["xattn"], cfg, h, *_cross_kv(lp["xattn"], cfg, enc))
+        h = common.apply_norm(cfg.norm, lp["norm3"], x)
+        x = common.seq_shard(x + common.ffn_apply(lp["ffn"], cfg, h))
+        ys = None
+        if collect_cache:
+            ck, cv = common.prefill_cache_from_kv(k, v, W)
+            xk, xv = _cross_kv(lp["xattn"], cfg, enc)
+            ys = {"k": ck, "v": cv, "xk": xk, "xv": xv}
+        return x, ys
+
+    x, cache = jax.lax.scan(maybe_remat(body), x, params["dec_layers"])
+    return common.apply_norm(cfg.norm, params["final_norm"], x), cache
+
+
+def forward(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    enc = encode(cfg, params, batch["audio_embeds"])
+    x, _ = _decoder(cfg, params, batch["tokens"], enc, collect_cache=False)
+    return x @ params["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch):
+    logits = forward(cfg, params, batch)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab,
+                         batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, cache_len: int = 0):
+    enc = encode(cfg, params, batch["audio_embeds"])
+    S = batch["tokens"].shape[1]
+    W = cache_len or S
+    x, cache = _decoder(cfg, params, batch["tokens"], enc,
+                        collect_cache=True, W=W)
+    logits = x[:, -1:] @ params["embed"].T
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache, tokens: jax.Array,
+                pos: jax.Array):
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", None, None)
+
+    def body(x, inputs):
+        lp, ck, cv, xk, xv = inputs
+        h = common.apply_norm(cfg.norm, lp["norm1"], x)
+        att, ck, cv = common.decode_attention(lp["attn"], cfg, h, ck, cv, pos)
+        x = x + att
+        h = common.apply_norm(cfg.norm, lp["norm2"], x)
+        x = x + _cross_attend(lp["xattn"], cfg, h, xk, xv)
+        h = common.apply_norm(cfg.norm, lp["norm3"], x)
+        x = x + common.ffn_apply(lp["ffn"], cfg, h)
+        return x, {"k": ck, "v": cv}
+
+    x, new_sc = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x @ params["embed"].T)[:, 0]
+    return logits, {"k": new_sc["k"], "v": new_sc["v"],
+                    "xk": cache["xk"], "xv": cache["xv"]}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = _dtype(cfg)
+    L, W = cfg.n_layers, cache_len
+    F = cfg.encdec.n_audio_frames
+    kv = (L, batch, W, cfg.n_kv_heads, cfg.d_head)
+    xkv = (L, batch, F, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+            "xk": jnp.zeros(xkv, dt), "xv": jnp.zeros(xkv, dt)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    F = cfg.encdec.n_audio_frames
+    sds = jax.ShapeDtypeStruct
+    audio = sds((B, F, cfg.d_model), _dtype(cfg))
+    if shape.kind == "train":
+        return {"audio_embeds": audio, "tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"audio_embeds": audio, "tokens": sds((B, S), jnp.int32)}
+    return {"tokens": sds((B, 1), jnp.int32)}
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        forward=lambda p, b: forward(cfg, p, b),
+        loss_fn=functools.partial(loss_fn, cfg),
+        prefill=functools.partial(prefill, cfg),
+        decode_step=functools.partial(decode_step, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        input_specs=functools.partial(input_specs, cfg),
+    )

@@ -1,0 +1,483 @@
+"""xLSTM (sLSTM + mLSTM blocks) — arXiv:2405.04517.
+
+* mLSTM: matrix-memory linear attention with exponential input gates and
+  sigmoid forget gates.  Prefill/training uses a CHUNKWISE form (the TPU
+  adaptation, DESIGN.md §3): within-chunk quadratic matmuls + a short scan
+  carrying the stabilized state (C_hat, n_hat, m) across chunks — O(T·Q)
+  instead of O(T²), matmul-bound on the MXU.  ``mlstm_reference`` is the
+  naive O(T) recurrent oracle for property tests.
+* sLSTM: scalar-memory recurrent cell with per-head block-diagonal recurrent
+  weights; inherently sequential => lax.scan over time.
+* Block layout: every ``slstm_every``-th block is an sLSTM block, the rest
+  are mLSTM (grouped scan, one group = (slstm_every-1) mLSTM + 1 sLSTM).
+
+Decode state is O(1) in context length => long_500k applies.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import common
+from repro.models.api import Model, cross_entropy
+from repro.models.mamba2 import _causal_conv
+from repro.utils.remat import maybe_remat, remat_enabled
+from repro.utils.sharding import constrain
+
+Params = Dict[str, Any]
+
+NEG = -1e30
+
+
+def _dtype(cfg): return jnp.dtype(cfg.dtype)
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    nh = cfg.n_heads
+    return d_in, nh, d_in // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ModelConfig, key, dt) -> Params:
+    dm = cfg.d_model
+    d_in, nh, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": common.make_norm_params(cfg, ks[0], dt),
+        "w_up": common.dense_init(ks[1], (dm, 2 * d_in), 0, dt),
+        "conv_w": common.dense_init(ks[2], (cfg.xlstm.conv_width, d_in), 0, dt),
+        "wq": common.dense_init(ks[3], (d_in, d_in), 0, dt),
+        "wk": common.dense_init(ks[4], (d_in, d_in), 0, dt),
+        "wv": common.dense_init(ks[5], (d_in, d_in), 0, dt),
+        "wi": common.dense_init(ks[6], (d_in, nh), 0, dt),
+        "wf": common.dense_init(ks[6], (d_in, nh), 0, dt),
+        "bi": jnp.zeros((nh,), jnp.float32),
+        "bf": jnp.full((nh,), 3.0, jnp.float32),   # open forget gates at init
+        "gn": jnp.ones((d_in,), dt),
+        "w_down": common.dense_init(ks[7], (d_in, dm), 0, dt),
+    }
+
+
+def _mlstm_qkvif(cfg, p, x_norm, conv_state=None):
+    """Project inputs.  x_norm: (B,T,dm).  Returns q,k,v (B,T,nh,dh),
+    ilog/flog (B,T,nh), z (B,T,d_in), new conv state."""
+    d_in, nh, dh = _mlstm_dims(cfg)
+    B, T, _ = x_norm.shape
+    up = x_norm @ p["w_up"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    x_c, conv_state = _causal_conv(p["conv_w"], x_in, conv_state)
+    q = (x_c @ p["wq"]).reshape(B, T, nh, dh) * (1.0 / math.sqrt(dh))
+    k = (x_c @ p["wk"]).reshape(B, T, nh, dh)
+    v = (x_in @ p["wv"]).reshape(B, T, nh, dh)
+    ilog = (x_c @ p["wi"]).astype(jnp.float32) + p["bi"]
+    flog = jax.nn.log_sigmoid(
+        (x_c @ p["wf"]).astype(jnp.float32) + p["bf"])
+    return q, k, v, ilog, flog, z, conv_state
+
+
+def mlstm_chunked(q, k, v, ilog, flog, chunk: int, state=None):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: (B,T,nh,dh); ilog/flog: (B,T,nh).
+    state: {"C": (B,nh,dh,dh), "n": (B,nh,dh), "m": (B,nh)} (stabilized:
+    true C = C_hat * exp(m)).  Returns (h (B,T,nh,dh), new state).
+    """
+    B, T, nh, dh = q.shape
+    Q = min(chunk, T)
+    T0 = T
+    if T % Q:
+        pad = Q - T % Q
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        ilog = jnp.pad(ilog, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        flog = jnp.pad(flog, ((0, 0), (0, pad), (0, 0)))  # logf=0 (f=1)
+        T = T + pad
+    nc = T // Q
+
+    def rs(a):  # (B,T,nh,...) -> (B,nc,nh,Q,...)
+        return a.reshape((B, nc, Q) + a.shape[2:]).swapaxes(2, 3)
+
+    qc, kc, vc = rs(q).astype(jnp.float32), rs(k).astype(jnp.float32), \
+        rs(v).astype(jnp.float32)
+    ic, fc = rs(ilog), rs(flog)                      # (B,nc,nh,Q)
+    b = jnp.cumsum(fc, axis=-1)                      # inclusive within chunk
+    F = b[..., -1]                                   # (B,nc,nh)
+
+    # intra-chunk decay matrix D[l,s] = b_l - b_s + i_s (s<=l)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    D = jnp.where(tri, b[..., :, None] - b[..., None, :] + ic[..., None, :],
+                  NEG)                                # (B,nc,nh,Q,Q)
+    m_intra = jnp.max(D, axis=-1)                     # (B,nc,nh,Q)
+    # state-injection weights (for chunk state update)
+    w_state = F[..., None] - b + ic                   # (B,nc,nh,Q)
+    m_state_intra = jnp.max(w_state, axis=-1)         # (B,nc,nh)
+
+    if state is None:
+        state = {"C": jnp.zeros((B, nh, dh, dh), jnp.float32),
+                 "n": jnp.zeros((B, nh, dh), jnp.float32),
+                 "m": jnp.full((B, nh), NEG, jnp.float32)}
+
+    def body(carry, xs):
+        C, n, m = carry
+        qx, kx, vx, Dx, m_i, b_x, ic_x, F_x, ws_x, msi_x = xs
+        # output stabilizer per position
+        m_inter = b_x + m[:, :, None]                 # (B,nh,Q)
+        m_out = jnp.maximum(m_i, m_inter)
+        w = jnp.exp(Dx - m_out[..., None])            # (B,nh,Q,Q)
+        scores = jnp.einsum("bhld,bhsd->bhls", qx, kx) * w
+        num = jnp.einsum("bhls,bhsd->bhld", scores, vx)
+        den = jnp.sum(scores, axis=-1)                # (B,nh,Q)
+        qC = jnp.einsum("bhld,bhde->bhle", qx, C)
+        scale_inter = jnp.exp(m_inter - m_out)[..., None]
+        num = num + qC * scale_inter
+        den = den + jnp.einsum("bhld,bhd->bhl", qx, n) * scale_inter[..., 0]
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_out))[..., None]
+        # state update
+        m_next = jnp.maximum(m + F_x, msi_x)
+        wsn = jnp.exp(ws_x - m_next[..., None])       # (B,nh,Q)
+        C = C * jnp.exp(m + F_x - m_next)[..., None, None] \
+            + jnp.einsum("bhs,bhsd,bhse->bhde", wsn, kx, vx)
+        n = n * jnp.exp(m + F_x - m_next)[..., None] \
+            + jnp.einsum("bhs,bhsd->bhd", wsn, kx)
+        if remat_enabled():
+            # train only: backward saves all nc chunk carries — sharding C
+            # (dh=1024 for the 4-head xLSTM) keeps them in HBM.  Prefill
+            # has no backward; the same constraint would buy an
+            # all-gather + reduce PER CHUNK (256 of them at 32k) for
+            # nothing — replicated C is 33 MB there.
+            C = constrain(C, "batch", None, "model", None)
+        return (C, n, m_next), h
+
+    def sw(a):
+        """Chunk-major for scan — with the chunk axis REPLICATED.  The
+        residual arrives sequence-sharded over 'model'; scanning over a
+        sharded chunk axis would trigger a resharding collective per chunk
+        per layer (measured: 1.5 TB all-to-all for xlstm prefill_32k).
+        One all-gather per layer here instead."""
+        a = constrain(a, "batch", *([None] * (a.ndim - 1)))
+        return a.swapaxes(0, 1)
+
+    (C, n, m), hs = jax.lax.scan(
+        body, (state["C"], state["n"], state["m"]),
+        (sw(qc), sw(kc), sw(vc), sw(D), sw(m_intra), sw(b), sw(ic), sw(F),
+         sw(w_state), sw(m_state_intra)))
+    h = hs.swapaxes(0, 1)                             # (B,nc,nh,Q,dh)
+    h = h.swapaxes(2, 3).reshape(B, T, nh, dh)[:, :T0]
+    return h.astype(q.dtype), {"C": C, "n": n, "m": m}
+
+
+def mlstm_reference(q, k, v, ilog, flog, state=None):
+    """Naive per-step recurrence oracle (float32, stabilized)."""
+    B, T, nh, dh = q.shape
+    if state is None:
+        state = {"C": jnp.zeros((B, nh, dh, dh), jnp.float32),
+                 "n": jnp.zeros((B, nh, dh), jnp.float32),
+                 "m": jnp.full((B, nh), NEG, jnp.float32)}
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + m - m_new)[..., None]
+        is_ = jnp.exp(it - m_new)[..., None]
+        C = C * fs[..., None] + is_[..., None] * kt[..., :, None] * vt[..., None, :]
+        n = n * fs + is_ * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(a.astype(jnp.float32).swapaxes(0, 1)
+               for a in (q, k, v, ilog, flog))
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    return hs.swapaxes(0, 1).astype(q.dtype), {"C": C, "n": n, "m": m}
+
+
+def mlstm_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                collect_state: bool = False):
+    d_in, nh, dh = _mlstm_dims(cfg)
+    B, T, _ = x.shape
+    h_in = common.apply_norm(cfg.norm, p["norm"], x)
+    q, k, v, ilog, flog, z, conv_state = _mlstm_qkvif(cfg, p, h_in)
+    h, st = mlstm_chunked(q, k, v, ilog, flog, chunk=128)
+    h = h.reshape(B, T, d_in)
+    h = common.apply_norm("rmsnorm", p["gn"],
+                          h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype))
+    out = h @ p["w_down"]
+    out = constrain(out, "batch", None, None)
+    state = {**st, "conv": conv_state} if collect_state else None
+    return common.seq_shard(x + out), state
+
+
+def mlstm_decode(cfg: ModelConfig, p: Params, x: jax.Array, state):
+    d_in, nh, dh = _mlstm_dims(cfg)
+    B = x.shape[0]
+    h_in = common.apply_norm(cfg.norm, p["norm"], x)
+    q, k, v, ilog, flog, z, conv_state = _mlstm_qkvif(
+        cfg, p, h_in, state["conv"])
+    st = {"C": state["C"], "n": state["n"], "m": state["m"]}
+    h, st = mlstm_reference(q, k, v, ilog, flog, st)   # T=1: one step
+    h = h.reshape(B, 1, d_in)
+    h = common.apply_norm("rmsnorm", p["gn"],
+                          h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype))
+    out = x + constrain(h @ p["w_down"], "batch", None, None)
+    return out, {**st, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ModelConfig, key, dt) -> Params:
+    dm = cfg.d_model
+    nh = cfg.n_heads
+    dh = dm // nh
+    d_ff = int(cfg.xlstm.proj_factor_slstm * dm)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": common.make_norm_params(cfg, ks[0], dt),
+        "w_gates": common.dense_init(ks[1], (dm, 4 * dm), 0, dt),   # z,i,f,o
+        "r_gates": common.dense_init(ks[2], (4, nh, dh, dh), 2, dt),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * dm,)), jnp.full((dm,), 3.0), jnp.zeros((dm,))]
+        ).astype(jnp.float32),
+        "gn": jnp.ones((dm,), dt),
+        "norm2": common.make_norm_params(cfg, ks[3], dt),
+        "ffn_w1": common.dense_init(ks[4], (dm, d_ff), 0, dt),
+        "ffn_w3": common.dense_init(ks[4], (dm, d_ff), 0, dt),
+        "ffn_w2": common.dense_init(ks[5], (d_ff, dm), 0, dt),
+    }
+
+
+def _slstm_cell_step(p, nh, dh, xw, carry):
+    """One time step.  xw: (B, 4*dm) pre-projected input contribution;
+    carry: (c, n, h, m) each (B, nh, dh)-shaped except m (B, nh)."""
+    c, n, h, m = carry
+    B = xw.shape[0]
+    dm = nh * dh
+    # recurrent contribution: h (B,nh,dh) @ r (4,nh,dh,dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", h, p["r_gates"].astype(h.dtype))
+    gates = xw.reshape(B, 4, nh, dh).swapaxes(0, 1) + rec
+    gates = gates.astype(jnp.float32) \
+        + p["b_gates"].reshape(4, 1, nh, dh)
+    zt = jnp.tanh(gates[0])
+    it = gates[1]                                    # log-space input gate
+    ft = jax.nn.log_sigmoid(gates[2])
+    ot = jax.nn.sigmoid(gates[3])
+    # per-head shared stabilizer (max over head dims)
+    it_h = jnp.max(it, axis=-1)                      # (B,nh)
+    m_new = jnp.maximum(jnp.max(ft, axis=-1) + m, it_h)
+    fs = jnp.exp(ft + (m - m_new)[..., None])
+    is_ = jnp.exp(it - m_new[..., None])
+    c = fs * c + is_ * zt
+    n = fs * n + is_
+    h_new = ot * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new.astype(h.dtype), m_new)
+
+
+def slstm_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                state=None, collect_state: bool = False):
+    """Full-sequence sLSTM block (scan over time) + gated FFN."""
+    dm = cfg.d_model
+    nh = cfg.n_heads
+    dh = dm // nh
+    B, T, _ = x.shape
+    h_in = common.apply_norm(cfg.norm, p["norm"], x)
+    xw = h_in @ p["w_gates"]                          # (B,T,4dm)
+    if state is None:
+        z = jnp.zeros((B, nh, dh), jnp.float32)
+        state = (z, z, z.astype(x.dtype), jnp.full((B, nh), NEG, jnp.float32))
+
+    def step(carry, xt):
+        carry = _slstm_cell_step(p, nh, dh, xt, carry)
+        return carry, carry[2]
+
+    state, hs = jax.lax.scan(step, state, xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, T, dm)
+    h = common.apply_norm("rmsnorm", p["gn"], h)
+    x = x + h
+    # gated FFN sub-block
+    h2 = common.apply_norm(cfg.norm, p["norm2"], x)
+    ff = jax.nn.silu(h2 @ p["ffn_w1"]) * (h2 @ p["ffn_w3"])
+    ff = constrain(ff, "batch", None, "model")
+    x = common.seq_shard(x + constrain(ff @ p["ffn_w2"], "batch", None, None))
+    return x, (state if collect_state else None)
+
+
+def slstm_decode(cfg, p, x, state):
+    return slstm_block(cfg, p, x, state=state, collect_state=True)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _layout(cfg: ModelConfig):
+    k = cfg.xlstm.slstm_every
+    G = cfg.n_layers // k
+    tail = cfg.n_layers - G * k          # tail mLSTM layers
+    return G, k - 1, tail                # G groups of (k-1 mLSTM + 1 sLSTM)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    G, M, tail = _layout(cfg)
+    ks = jax.random.split(key, 6)
+    Vp = cfg.vocab_padded()
+    p = {
+        "embed": common.embed_init(ks[1], (Vp, cfg.d_model), dt),
+        "final_norm": common.make_norm_params(cfg, ks[3], dt),
+        "lm_head": common.dense_init(ks[4], (cfg.d_model, Vp), 0, dt),
+    }
+    if G:
+        mk = jax.random.split(ks[0], max(G * M, 1))
+        mkeys = mk.reshape((G, M) + mk.shape[1:])
+        p["mlstm"] = jax.vmap(jax.vmap(lambda k: init_mlstm(cfg, k, dt)))(mkeys)
+        p["slstm"] = jax.vmap(lambda k: init_slstm(cfg, k, dt))(
+            jax.random.split(ks[2], G))
+    if tail:
+        p["tail"] = jax.vmap(lambda k: init_mlstm(cfg, k, dt))(
+            jax.random.split(ks[5], tail))
+    return p
+
+
+def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
+               collect: bool):
+    G, M, tail = _layout(cfg)
+
+    def m_layer(x, lp):
+        x, st = mlstm_block(cfg, lp, x, collect_state=collect)
+        return x, st
+
+    def group(x, inputs):
+        gp, sp = inputs
+        x, m_states = jax.lax.scan(maybe_remat(m_layer), x, gp)
+        x, s_state = slstm_block(cfg, sp, x, collect_state=collect)
+        return x, (m_states, s_state)
+
+    m_states = s_states = t_states = None
+    if G:
+        x, (m_states, s_states) = jax.lax.scan(
+            maybe_remat(group), x, (params["mlstm"], params["slstm"]))
+    if tail:
+        x, t_states = jax.lax.scan(maybe_remat(m_layer), x, params["tail"])
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+    cache = None
+    if collect:
+        cache = {}
+        if G:
+            cache.update({"mlstm": m_states, "slstm": s_states})
+        if tail:
+            cache["tail"] = t_states
+    return x, cache
+
+
+def forward(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    x = constrain(params["embed"][batch["tokens"]], "batch", None, None)
+    x, _ = _run_stack(cfg, params, x, collect=False)
+    return x @ params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch):
+    logits = forward(cfg, params, batch)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab,
+                         batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, cache_len: int = 0):
+    x = constrain(params["embed"][batch["tokens"]], "batch", None, None)
+    x, cache = _run_stack(cfg, params, x, collect=True)
+    logits = (x[:, -1:] @ params["lm_head"])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache, tokens, pos):
+    G, M, tail = _layout(cfg)
+    x = constrain(params["embed"][tokens], "batch", None, None)
+
+    def m_layer(x, inputs):
+        lp, st = inputs
+        x, st = mlstm_decode(cfg, lp, x, st)
+        return x, st
+
+    def group(x, inputs):
+        gp, g_st, sp, s_st = inputs
+        x, m_states = jax.lax.scan(m_layer, x, (gp, g_st))
+        x, s_state = slstm_decode(cfg, sp, x, s_st)
+        return x, (m_states, s_state)
+
+    new_cache = {}
+    if G:
+        x, (m_states, s_states) = jax.lax.scan(
+            group, x, (params["mlstm"], cache["mlstm"], params["slstm"],
+                       cache["slstm"]))
+        new_cache = {"mlstm": m_states, "slstm": s_states}
+    if tail:
+        x, t_states = jax.lax.scan(m_layer, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = t_states
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """O(1)-in-context recurrent state (cache_len is ignored by design)."""
+    dt = _dtype(cfg)
+    G, M, tail = _layout(cfg)
+    d_in, nh, dh = _mlstm_dims(cfg)
+    dms = cfg.d_model // cfg.n_heads
+    K = cfg.xlstm.conv_width
+
+    def m_state(lead):
+        return {"C": jnp.zeros(lead + (batch, nh, dh, dh), jnp.float32),
+                "n": jnp.zeros(lead + (batch, nh, dh), jnp.float32),
+                "m": jnp.full(lead + (batch, nh), NEG, jnp.float32),
+                "conv": jnp.zeros(lead + (batch, K - 1, d_in), dt)}
+
+    cache = {}
+    if G:
+        z = jnp.zeros((G, batch, cfg.n_heads, dms), jnp.float32)
+        cache = {"mlstm": m_state((G, M)),
+                 "slstm": (z, z, z.astype(dt),
+                           jnp.full((G, batch, cfg.n_heads), NEG,
+                                    jnp.float32))}
+    if tail:
+        cache["tail"] = m_state((tail,))
+    return cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        return {"tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": sds((B, S), jnp.int32)}
+    return {"tokens": sds((B, 1), jnp.int32)}
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        forward=lambda p, b: forward(cfg, p, b),
+        loss_fn=functools.partial(loss_fn, cfg),
+        prefill=functools.partial(prefill, cfg),
+        decode_step=functools.partial(decode_step, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        input_specs=functools.partial(input_specs, cfg),
+    )

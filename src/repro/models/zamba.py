@@ -1,0 +1,229 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block applied
+every ``attn_every`` layers (one weight set reused at all sites).
+
+Layer layout for n_layers=81, attn_every=6:
+  13 groups of [6 mamba layers + shared attn+FFN block] + 3 tail mamba layers.
+
+The shared attention uses a 4096 sliding window (DESIGN.md §4): Zamba2's
+global memory is carried by the SSM state, so windowing the shared-attn KV
+keeps decode memory O(1) in context length and makes long_500k admissible.
+
+Cache pytree:
+  main_ssm  (G, K, B, H, P, N)   mamba states (group-major)
+  main_conv (G, K, B, cw-1, C)
+  tail_ssm  (Tl, B, H, P, N), tail_conv (Tl, B, cw-1, C)
+  attn_k/v  (G, B, W, nkv, dh)   shared-attn slot caches per site
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import common, mamba2
+from repro.models.api import Model, cross_entropy
+from repro.utils.remat import maybe_remat
+from repro.utils.sharding import constrain
+
+Params = Dict[str, Any]
+
+ATTN_WINDOW = 4096
+
+
+def _dtype(cfg): return jnp.dtype(cfg.dtype)
+
+
+def _layout(cfg: ModelConfig):
+    K = cfg.hybrid.attn_every
+    G = cfg.n_layers // K
+    tail = cfg.n_layers - G * K
+    return G, K, tail
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    G, K, tail = _layout(cfg)
+    ks = jax.random.split(key, 7)
+    Vp = cfg.vocab_padded()
+
+    mk = jax.random.split(ks[0], G * K)
+    main_keys = mk.reshape((G, K) + mk.shape[1:])
+    main = jax.vmap(jax.vmap(lambda k: mamba2.init_block(cfg, k, dt)))(main_keys)
+    tail_p = jax.vmap(lambda k: mamba2.init_block(cfg, k, dt))(
+        jax.random.split(ks[1], max(tail, 1)))
+
+    ka, kf, kn = jax.random.split(ks[2], 3)
+    shared = {"attn": common.make_attn_params(cfg, ka, dt),
+              "ffn": common.make_ffn_params(cfg, kf, dt),
+              "norm1": common.make_norm_params(cfg, kn, dt),
+              "norm2": common.make_norm_params(cfg, kn, dt)}
+
+    p = {"embed": common.embed_init(ks[3], (Vp, cfg.d_model), dt),
+         "main": main, "shared": shared,
+         "final_norm": common.make_norm_params(cfg, ks[4], dt),
+         "lm_head": common.dense_init(ks[5], (cfg.d_model, Vp), 0, dt)}
+    if tail:
+        p["tail"] = tail_p
+    return p
+
+
+def _shared_attn_fwd(cfg: ModelConfig, sp: Params, x: jax.Array,
+                     positions: jax.Array, W: int, collect: bool):
+    """Shared attention + FFN block (full-sequence)."""
+    B, S, _ = x.shape
+    h = common.apply_norm(cfg.norm, sp["norm1"], x)
+    q, k, v = common.qkv_proj(sp["attn"], cfg, h, positions)
+    att = common.chunked_causal_attention(q, k, v, ATTN_WINDOW)
+    att = att.reshape(B, S, cfg.n_heads * cfg.d_head) @ sp["attn"]["wo"]
+    x = x + constrain(att, "batch", None, None)
+    h = common.apply_norm(cfg.norm, sp["norm2"], x)
+    x = common.seq_shard(x + common.ffn_apply(sp["ffn"], cfg, h))
+    cache = common.prefill_cache_from_kv(k, v, W) if collect else None
+    return x, cache
+
+
+def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
+               collect: bool, W: int = 0):
+    """Shared full-sequence pass for forward/prefill."""
+    G, K, tail = _layout(cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def mamba_layer(x, lp):
+        h = common.apply_norm(cfg.norm, lp["norm"], x)
+        out, st = mamba2.block_forward(cfg, lp, h, collect_state=collect)
+        return common.seq_shard(x + out), st
+
+    def group(x, gp):
+        x, states = jax.lax.scan(maybe_remat(mamba_layer), x, gp)
+        x, kvcache = _shared_attn_fwd(cfg, params["shared"], x, positions,
+                                      W, collect)
+        return x, (states, kvcache)
+
+    x, (main_states, kvcaches) = jax.lax.scan(maybe_remat(group), x,
+                                               params["main"])
+    tail_states = None
+    if tail:
+        x, tail_states = jax.lax.scan(mamba_layer, x, params["tail"])
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+
+    cache = None
+    if collect:
+        cache = {"main_ssm": main_states["ssm"],
+                 "main_conv": main_states["conv"],
+                 "attn_k": kvcaches[0], "attn_v": kvcaches[1]}
+        if tail:
+            cache["tail_ssm"] = tail_states["ssm"]
+            cache["tail_conv"] = tail_states["conv"]
+    return x, cache
+
+
+def forward(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    x = params["embed"][batch["tokens"]]
+    x = constrain(x, "batch", None, None)
+    x, _ = _run_stack(cfg, params, x, collect=False)
+    return x @ params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch):
+    logits = forward(cfg, params, batch)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab,
+                         batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, cache_len: int = 0):
+    x = params["embed"][batch["tokens"]]
+    x = constrain(x, "batch", None, None)
+    S = x.shape[1]
+    W = min(cache_len or S, ATTN_WINDOW)
+    x, cache = _run_stack(cfg, params, x, collect=True, W=W)
+    logits = (x[:, -1:] @ params["lm_head"])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache, tokens: jax.Array,
+                pos: jax.Array):
+    G, K, tail = _layout(cfg)
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", None, None)
+
+    def mamba_layer(x, inputs):
+        lp, st = inputs
+        h = common.apply_norm(cfg.norm, lp["norm"], x)
+        out, st = mamba2.block_decode(cfg, lp, h, st)
+        return x + out, st
+
+    def group(x, inputs):
+        gp, g_ssm, g_conv, ck, cv = inputs
+        x, states = jax.lax.scan(
+            mamba_layer, x, (gp, {"ssm": g_ssm, "conv": g_conv}))
+        sp = params["shared"]
+        h = common.apply_norm(cfg.norm, sp["norm1"], x)
+        att, ck, cv = common.decode_attention(sp["attn"], cfg, h, ck, cv, pos)
+        x = x + att
+        h = common.apply_norm(cfg.norm, sp["norm2"], x)
+        x = x + common.ffn_apply(sp["ffn"], cfg, h)
+        return x, (states, ck, cv)
+
+    x, (main_states, new_k, new_v) = jax.lax.scan(
+        group, x, (params["main"], cache["main_ssm"], cache["main_conv"],
+                   cache["attn_k"], cache["attn_v"]))
+    new_cache = {"main_ssm": main_states["ssm"],
+                 "main_conv": main_states["conv"],
+                 "attn_k": new_k, "attn_v": new_v}
+    if tail:
+        x, tail_states = jax.lax.scan(
+            mamba_layer, x, (params["tail"],
+                             {"ssm": cache["tail_ssm"],
+                              "conv": cache["tail_conv"]}))
+        new_cache["tail_ssm"] = tail_states["ssm"]
+        new_cache["tail_conv"] = tail_states["conv"]
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    G, K, tail = _layout(cfg)
+    dt = _dtype(cfg)
+    d_inner, H, P, N = mamba2.dims(cfg)
+    cw, C = cfg.ssm.conv_width, mamba2.conv_channels(cfg)
+    W = min(cache_len, ATTN_WINDOW)
+    kv = (G, batch, W, cfg.n_kv_heads, cfg.d_head)
+    cache = {
+        "main_ssm": jnp.zeros((G, K, batch, H, P, N), jnp.float32),
+        "main_conv": jnp.zeros((G, K, batch, cw - 1, C), dt),
+        "attn_k": jnp.zeros(kv, dt), "attn_v": jnp.zeros(kv, dt),
+    }
+    if tail:
+        cache["tail_ssm"] = jnp.zeros((tail, batch, H, P, N), jnp.float32)
+        cache["tail_conv"] = jnp.zeros((tail, batch, cw - 1, C), dt)
+    return cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        return {"tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": sds((B, S), jnp.int32)}
+    return {"tokens": sds((B, 1), jnp.int32)}
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        forward=lambda p, b: forward(cfg, p, b),
+        loss_fn=functools.partial(loss_fn, cfg),
+        prefill=functools.partial(prefill, cfg),
+        decode_step=functools.partial(decode_step, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        input_specs=functools.partial(input_specs, cfg),
+    )

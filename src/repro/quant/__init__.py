@@ -1,0 +1,6 @@
+from repro.quant.ptq import (QTensor, dequantize, pack_int4, quantize,
+                             quantize_tree, tree_bytes, unpack_int4)
+from repro.quant.calibration import measure_alpha, measure_dppl
+
+__all__ = ["QTensor", "quantize", "dequantize", "pack_int4", "unpack_int4",
+           "quantize_tree", "tree_bytes", "measure_alpha", "measure_dppl"]

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (analyze_lowered, collective_bytes,
+                                     roofline_terms)
+
+__all__ = ["analyze_lowered", "collective_bytes", "roofline_terms"]

@@ -1,0 +1,244 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute    = FLOPs / (chips x 197 TF/s bf16)
+  memory     = HBM bytes / (chips x 819 GB/s)
+  collective = collective bytes / (chips x 50 GB/s/link ICI)
+
+Two sources are recorded for every term:
+
+* **HLO-reported** — ``compiled.cost_analysis()`` and raw HLO-text
+  collective parsing.  CAVEAT: XLA costs a ``while`` body ONCE, so for
+  scan-over-layers programs these undercount by ~n_layers.  The collective
+  parser fixes this (it walks while bodies and multiplies by trip count);
+  flops/bytes keep the raw value as a cross-check only.
+* **Analytic** — the paper's own cost model (core/costmodel.py) evaluated
+  at the (arch x shape): trusted for scale, used for the headline terms
+  and the bottleneck call.
+
+MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (forward);
+useful_compute_ratio = MODEL_FLOPS / analytic_total_flops (<= 1; the gap
+is attention reads, recompute and padding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+from repro.config import HardwareSpec, ModelConfig, ShapeConfig, V5E
+from repro.core.costmodel import CostModel
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Total bytes of 'bf16[2,3]' / tuple '(f32[8], f32[8])' strings."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware collective parsing
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLL_LINE_RE = re.compile(
+    r"=\s*((?:[a-z0-9]+\[[^\]]*\])(?:,?\s*[a-z0-9]+\[[^\]]*\])*|\([^()]*\))\s*"
+    r"(" + "|".join(_COLLECTIVE_KINDS) + r")(?:-start)?\(")
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """Map computation name -> body text (brace-delimited blocks)."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in hlo.splitlines():
+        if cur_name is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur_name, cur_lines, depth = m.group(1), [line], 1
+        else:
+            cur_lines.append(line)
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+    return comps
+
+
+def _trip_count(cond_text: str) -> int:
+    """Largest integer constant in a while condition ~ the trip count."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Collective bytes by kind, loop-aware: collectives inside a while
+    body are multiplied by the loop's trip count (XLA costs bodies once).
+    Bytes = output-shape volume per collective (the tensor the ICI must
+    deliver per device participation).
+    """
+    comps = _split_computations(hlo_text)
+
+    def direct(text: str) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for m in _COLL_LINE_RE.finditer(text):
+            out[m.group(2)] = out.get(m.group(2), 0.0) \
+                + _shape_bytes(m.group(1))
+        return out
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total_of(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if depth > 16 or name not in comps:
+            return {}
+        text = comps[name]
+        out = direct(text)
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            sub = total_of(body, depth + 1)
+            for k, v in sub.items():
+                out[k] = out.get(k, 0.0) + v * trips
+        memo[name] = out
+        return out
+
+    # entry computation: the one containing ENTRY, else sum top-level text
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    out: Dict[str, float] = {}
+    if entry and entry in comps:
+        out = dict(total_of(entry))
+    else:   # fallback: flat parse, no loop scaling
+        out = direct(hlo_text)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic terms (the paper's cost model at the arch x shape)
+# ---------------------------------------------------------------------------
+
+
+def analytic_costs(cfg: ModelConfig, shape: ShapeConfig
+                   ) -> Tuple[float, float]:
+    """(total FLOPs, total HBM bytes) for one step of this shape."""
+    cm = CostModel(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    W = cm.weight_bytes()                      # bf16 weight bytes
+    act = 2.0 * cfg.d_model * cfg.n_layers     # bytes/token residual traffic
+    kv_scale = cfg.kv_bits / 16.0              # int8 KV halves cache bytes
+    if shape.kind == "train":
+        fwd = cm.prefill_flops(S, B)
+        flops = 3.0 * fwd                      # fwd + 2x bwd
+        bytes_ = 3.0 * (W + 8.0 * act * B * S) + 8.0 * W   # + AdamW f32 I/O
+    elif shape.kind == "prefill":
+        flops = cm.prefill_flops(S, B)
+        bytes_ = W + kv_scale * cm.kv_bytes_prefill(S, B) \
+            + 8.0 * act * B * S
+    else:   # decode: ONE token against an S-token cache
+        flops = B * cm.decode_flops(S, [2])    # 1 autoregressive iteration
+        bytes_ = W + kv_scale * cm.kv_bytes_prefill(S, B) + 8.0 * act * B
+    return flops, bytes_
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D (train) / 2·N·D (forward-only), N = active params."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   chips: int, hw: HardwareSpec = V5E) -> Dict[str, float]:
+    """All three terms in seconds (aggregate work / aggregate capability)."""
+    return {
+        "t_compute": flops / (chips * hw.peak_flops),
+        "t_memory": bytes_ / (chips * hw.hbm_bw),
+        "t_collective": coll_bytes / (chips * hw.ici_bw),
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("t_compute", "t_memory", "t_collective"),
+               key=lambda k: terms[k])
+
+
+def analyze_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    lowered, compiled,
+                    donated_frac: float = 0.0) -> Dict[str, Any]:
+    """Full §Roofline record for one lowered+compiled combination.
+
+    ``donated_frac`` — fraction of argument bytes aliased to outputs by
+    buffer donation (CPU AOT analysis does not apply donation, the TPU
+    runtime does; we subtract the aliased output bytes to report the
+    deployable footprint).
+    """
+    chips = mesh.devices.size
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older API returns [dict]
+        cost = cost[0]
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+
+    mem = compiled.memory_analysis()
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    per_dev = arg_b + out_b + tmp_b - min(donated_frac * arg_b, out_b)
+
+    try:
+        hlo_text = compiled.as_text()
+    except Exception:
+        hlo_text = lowered.as_text()
+    coll = collective_bytes(hlo_text)
+
+    a_flops, a_bytes = analytic_costs(cfg, shape)
+    terms = roofline_terms(a_flops, a_bytes, coll["total"], chips)
+    mf = model_flops(cfg, shape)
+    return {
+        "chips": chips,
+        "analytic_flops": a_flops,
+        "analytic_bytes": a_bytes,
+        "hlo_flops": hlo_flops,              # cross-check (loop bodies x1)
+        "hlo_bytes": hlo_bytes,
+        "collective_bytes": coll["total"],   # loop-aware
+        "collectives": {k: v for k, v in coll.items() if k != "total"},
+        "bytes_per_device": per_dev,
+        "arg_bytes": arg_b, "out_bytes": out_b, "temp_bytes": tmp_b,
+        "fits": per_dev <= V5E.hbm_bytes,
+        **terms,
+        "bottleneck": dominant_term(terms),
+        "model_flops": mf,
+        "useful_compute_ratio": mf / a_flops if a_flops else 0.0,
+    }

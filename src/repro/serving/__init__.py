@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, GenerationResult
+
+__all__ = ["ServingEngine", "GenerationResult"]

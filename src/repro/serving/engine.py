@@ -1,0 +1,127 @@
+"""Batched-inference engine: executes scheduled batches on the real JAX model.
+
+This is the data plane behind the paper's scheduler (the control plane).
+A scheduled batch of prompts is padded to the epoch's s' (exactly the
+paper's 'extend all prompts to the maximum length' assumption), prefilled
+in one pass, then decoded token-by-token under a ``lax.scan`` / while loop
+with per-request EOS and max-length masks.
+
+Static shapes: (batch_capacity, s') for prefill and a KV cache capacity of
+s' + n_max — one compiled executable serves every epoch (TPU-friendly, and
+why the paper's padded cost model maps 1:1 onto this engine).
+
+Weights can be served quantized: ``quant_bits`` runs ``quantize_tree`` so
+dense matmuls execute in the Pallas dequant-matmul kernel (transformer
+family; other families dequantize at load, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.api import Model, build_model
+from repro.quant.ptq import dequantize_tree, quantize_tree
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, n_max) generated ids (post-prompt)
+    lengths: np.ndarray         # (B,) emitted length per request
+    batch: int
+
+
+class ServingEngine:
+    """Fixed-shape batched prefill + decode executor for one model."""
+
+    def __init__(self, cfg: ModelConfig, params: Any = None,
+                 batch_capacity: int = 8, s_max: int = 512,
+                 n_max: int = 128, quant_bits: int = 0,
+                 eos_id: int = 0, seed: int = 0):
+        self.cfg = cfg
+        self.model: Model = build_model(cfg)
+        self.batch_capacity = batch_capacity
+        self.s_max = s_max
+        self.n_max = n_max
+        self.eos_id = eos_id
+        if params is None:
+            params = self.model.init(jax.random.key(seed))
+        if quant_bits:
+            params = quantize_tree(params, quant_bits)
+            if cfg.family not in ("dense", "moe", "vlm"):
+                # families whose matmuls don't route through common.mm yet
+                params = dequantize_tree(params)
+        self.params = params
+        self.cache_len = s_max + n_max
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
+
+    # -- compiled step functions --------------------------------------------
+
+    def _prefill_fn(self, params, batch):
+        return self.model.prefill(params, batch, self.cache_len)
+
+    def _decode_fn(self, params, cache, tokens, pos):
+        return self.model.decode_step(params, cache, tokens, pos)
+
+    # -- public API ----------------------------------------------------------
+
+    def pad_prompts(self, prompts: Sequence[Sequence[int]]) -> np.ndarray:
+        """Left-truncate/right-pad prompts to (batch_capacity, s_max)."""
+        B = self.batch_capacity
+        out = np.zeros((B, self.s_max), np.int32)
+        for i, p in enumerate(prompts[:B]):
+            p = list(p)[-self.s_max:]
+            out[i, -len(p):] = p        # right-aligned => last slot is last
+        return out
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 n_tokens: Optional[Sequence[int]] = None,
+                 greedy: bool = True) -> GenerationResult:
+        """Prefill + decode a batch.  n_tokens caps each request's output."""
+        B = self.batch_capacity
+        nb = len(prompts)
+        assert nb <= B, (nb, B)
+        caps = np.full((B,), self.n_max, np.int32)
+        if n_tokens is not None:
+            caps[:nb] = np.minimum(np.asarray(n_tokens, np.int32), self.n_max)
+        caps[nb:] = 0
+
+        tokens = jnp.asarray(self.pad_prompts(prompts))
+        batch = {"tokens": tokens}
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (B, self.cfg.vlm.n_img_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "audio":
+            batch["audio_embeds"] = jnp.zeros(
+                (B, self.cfg.encdec.n_audio_frames, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        logits, cache = self._prefill(self.params, batch)
+
+        caps_j = jnp.asarray(caps)
+        out = np.zeros((B, self.n_max), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        done = np.zeros((B,), bool)
+        cur = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1),
+                         np.int32)
+
+        for t in range(int(caps.max(initial=0))):
+            alive = (~done) & (t < caps)
+            if not alive.any():
+                break
+            out[alive, t] = cur[alive]
+            lengths[alive] += 1
+            done |= (cur == self.eos_id) & alive
+            step_tok = jnp.asarray(cur)[:, None]
+            pos = jnp.int32(self.s_max + t)
+            logits, cache = self._decode(self.params, cache, step_tok, pos)
+            cur = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1),
+                             np.int32)
+        return GenerationResult(tokens=out[:nb], lengths=lengths[:nb],
+                                batch=nb)

@@ -1,0 +1,6 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.data import SyntheticLM
+from repro.train.trainer import Trainer, TrainState
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "SyntheticLM",
+           "Trainer", "TrainState"]

@@ -1,0 +1,40 @@
+"""Flat-npz checkpointing for arbitrary param/optimizer pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _to_np(leaf) -> np.ndarray:
+    arr = jnp.asarray(leaf)
+    if arr.dtype == jnp.bfloat16:       # npz has no bf16: store f32
+        arr = arr.astype(jnp.float32)
+    return np.asarray(arr)
+
+
+def save(path: str, tree: Any) -> None:
+    leaves, _ = _flatten(tree)
+    arrays = {f"leaf_{i}": _to_np(l) for i, l in enumerate(leaves)}
+    tmp = path + ".tmp"
+    np.savez(tmp, **arrays)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure (and dtypes) of ``like``."""
+    leaves, treedef = _flatten(like)
+    with np.load(path) as data:
+        loaded = [jnp.asarray(data[f"leaf_{i}"], leaves[i].dtype)
+                  for i in range(len(leaves))]
+    for got, want in zip(loaded, leaves):
+        assert got.shape == want.shape, (got.shape, want.shape)
+    return jax.tree_util.tree_unflatten(treedef, loaded)

@@ -1,0 +1,84 @@
+"""Training loop: jit'd step with optional remat, metrics, checkpoints.
+
+Single-process driver used by examples/ and smoke tests; the distributed
+path goes through launch/train.py (same step function under pjit).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.api import Model, build_model
+from repro.train import checkpoint as ckpt
+from repro.train.data import SyntheticLM
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                   adamw_update)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    remat: bool = False) -> Callable:
+    loss_fn = model.loss_fn
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn)
+
+    def step(state: TrainState, batch) -> tuple:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return TrainState(new_params, new_opt), metrics
+
+    return step
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    batch: int = 8
+    seq: int = 128
+    opt_cfg: AdamWConfig = field(default_factory=AdamWConfig)
+    remat: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        self.model = build_model(self.cfg)
+        self.data = SyntheticLM(self.cfg, self.batch, self.seq,
+                                seed=self.seed)
+        self._step = jax.jit(make_train_step(self.model, self.opt_cfg,
+                                             self.remat))
+
+    def init_state(self) -> TrainState:
+        params = self.model.init(jax.random.key(self.seed))
+        return TrainState(params, adamw_init(params))
+
+    def run(self, steps: int, state: Optional[TrainState] = None,
+            log_every: int = 10, checkpoint_path: Optional[str] = None,
+            log: Callable[[str], None] = print) -> tuple:
+        state = state or self.init_state()
+        history: List[Dict[str, float]] = []
+        for i in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.data.next_batch().items()}
+            state, metrics = self._step(state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = i
+                history.append(row)
+                log(f"step {i:5d}  loss={row['loss']:.4f}  "
+                    f"grad_norm={row['grad_norm']:.3f}  lr={row['lr']:.2e}")
+        if checkpoint_path:
+            ckpt.save(checkpoint_path, (state.params, state.opt))
+        return state, history

@@ -1,0 +1,38 @@
+"""Remat (activation-checkpoint) policy, installed by launchers.
+
+Models wrap their scan-over-layers bodies in :func:`maybe_remat`.  Without
+an installed policy this is identity (smoke tests, serving).  Training
+launchers install ``remat_scan()`` so each layer's activations (including
+the S x S attention intermediates) are recomputed in backward instead of
+saved — the difference between ~GBs and ~TBs of temp at 4k x 256 batch.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable
+
+import jax
+
+_state = threading.local()
+
+
+def remat_enabled() -> bool:
+    return getattr(_state, "on", False)
+
+
+@contextlib.contextmanager
+def remat_scan(on: bool = True):
+    prev = remat_enabled()
+    _state.on = on
+    try:
+        yield
+    finally:
+        _state.on = prev
+
+
+def maybe_remat(body: Callable) -> Callable:
+    """Checkpoint a scan body when the policy is active (trace-time check)."""
+    if remat_enabled():
+        return jax.checkpoint(body)
+    return body

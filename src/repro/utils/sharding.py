@@ -1,0 +1,119 @@
+"""Sharding helpers.
+
+Models are written against *logical* axes (``batch``, ``model``) and only
+apply ``with_sharding_constraint`` when a launcher has installed an axis
+context.  Smoke tests / single-device runs never install one, so the same
+model code runs unconstrained on one CPU device.
+
+Constraints are divisibility-aware: if a tensor dim is not divisible by the
+mesh axes mapped to it (e.g. 56 attention heads over a 16-way model axis),
+that dim falls back to replicated instead of failing at lowering.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _ctx() -> Optional["AxisCtx"]:
+    return getattr(_state, "ctx", None)
+
+
+class AxisCtx:
+    """Maps logical axis names to physical mesh axis names.
+
+    ``batch`` -> tuple of mesh axes the batch dim is sharded over
+    (("data",) single-pod, ("pod", "data") multi-pod, or () replicated);
+    ``model`` -> the tensor-parallel mesh axis (or None).
+    ``sizes`` -> physical mesh axis sizes, used for divisibility checks.
+    """
+
+    def __init__(self, batch: Sequence[str] = ("data",),
+                 model: Optional[str] = "model",
+                 sizes: Optional[Dict[str, int]] = None):
+        self.batch: Tuple[str, ...] = tuple(batch)
+        self.model = model
+        self.sizes = dict(sizes or {})
+
+    def resolve(self, name: Optional[str]):
+        if name is None:
+            return None
+        if name == "batch":
+            return self.batch if self.batch else None
+        if name == "model":
+            return self.model
+        raise ValueError(f"unknown logical axis {name!r}")
+
+    def divisor(self, name: Optional[str]) -> int:
+        axes = self.resolve(name)
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return math.prod(self.sizes.get(a, 1) for a in axes)
+
+
+@contextlib.contextmanager
+def axis_ctx(batch: Sequence[str] = ("data",), model: Optional[str] = "model",
+             sizes: Optional[Dict[str, int]] = None):
+    prev = _ctx()
+    _state.ctx = AxisCtx(batch, model, sizes)
+    try:
+        yield _state.ctx
+    finally:
+        _state.ctx = prev
+
+
+def axis_ctx_for_mesh(mesh, batch: Sequence[str] = ("data",),
+                      model: Optional[str] = "model"):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch = tuple(a for a in batch if a in sizes)
+    model = model if (model in sizes) else None
+    return axis_ctx(batch, model, sizes)
+
+
+def logical_spec(*names: Optional[str],
+                 shape: Optional[Tuple[int, ...]] = None) -> Optional[P]:
+    """Resolve logical dim names to a PartitionSpec under the active context.
+
+    Returns None when no context is installed (=> no constraint applied).
+    When ``shape`` is given, dims not divisible by their mapped mesh axes
+    fall back to replicated.
+    """
+    ctx = _ctx()
+    if ctx is None:
+        return None
+    entries = []
+    for i, n in enumerate(names):
+        if shape is not None and n is not None:
+            if shape[i] % ctx.divisor(n) != 0:
+                entries.append(None)
+                continue
+        entries.append(ctx.resolve(n))
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` against logical dim names (no-op without
+    an installed axis context; non-divisible dims fall back to replicated)."""
+    spec = logical_spec(*names, shape=tuple(x.shape))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def active() -> bool:
+    return _ctx() is not None
+
+
+def axis_divisor(name: str) -> int:
+    """Product of mesh-axis sizes behind a logical axis (1 if no context)."""
+    ctx = _ctx()
+    return 1 if ctx is None else ctx.divisor(name)

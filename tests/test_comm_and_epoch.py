@@ -1,0 +1,66 @@
+"""Property tests for the OFDMA comm model + epoch simulation invariants."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm
+from repro.core.environment import dbm_to_watt, paper_env
+from repro.core.epoch import simulate
+from repro.core.request import BITS_PER_TOKEN, Request, RequestGenerator
+
+ENV = paper_env("bloom-3b", "W8A16")
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([128, 256, 512]), st.floats(0.003, 0.1))
+def test_rho_min_is_exactly_sufficient(s, h):
+    """At rho = rho_min the prompt uploads in exactly T_U."""
+    r = Request(0, s, 128, 1.0, 0.0, h)
+    rho = comm.rho_min_up(ENV, r)
+    rate = comm.rate_up(ENV, r, rho)
+    assert rate * ENV.T_U == pytest.approx(s * BITS_PER_TOKEN, rel=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.003, 0.05), st.floats(1.01, 5.0))
+def test_better_channel_needs_less_bandwidth(h, gain):
+    r1 = Request(0, 256, 128, 1.0, 0.0, h)
+    r2 = Request(1, 256, 128, 1.0, 0.0, h * gain)
+    assert comm.rho_min_up(ENV, r2) < comm.rho_min_up(ENV, r1)
+
+
+def test_dbm_conversion():
+    assert dbm_to_watt(0.0) == pytest.approx(1e-3)
+    assert dbm_to_watt(30.0) == pytest.approx(1.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100), st.sampled_from([5.0, 25.0, 60.0]))
+def test_epoch_accounting_invariants(seed, rate):
+    res = simulate(ENV, "dftsp", rate, n_epochs=6, seed=seed)
+    assert res.served >= 0 and res.dropped >= 0
+    # every served/dropped request arrived (within queue carryover slack)
+    assert res.served + res.dropped <= res.arrived + 4 * rate
+    assert len(res.batch_sizes) == 6
+    assert res.served == sum(res.batch_sizes)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 50))
+def test_generator_reproducible(seed):
+    a = RequestGenerator(rate=20, seed=seed).within(0, 2.0)
+    b = RequestGenerator(rate=20, seed=seed).within(0, 2.0)
+    assert [(r.s, r.n, r.tau, r.h) for r in a] == \
+        [(r.s, r.n, r.tau, r.h) for r in b]
+
+
+def test_request_marginals_match_paper():
+    """§IV: lengths in {128,256,512}, tau in [0.5,2], a in [0,1]."""
+    reqs = RequestGenerator(rate=500, seed=0).within(0, 2.0)
+    assert len(reqs) > 500
+    assert {r.s for r in reqs} <= {128, 256, 512}
+    assert {r.n for r in reqs} <= {128, 256, 512}
+    assert all(0.5 <= r.tau <= 2.0 for r in reqs)
+    assert all(0.0 <= r.a <= 1.0 for r in reqs)
+    assert all(r.h > 0 for r in reqs)

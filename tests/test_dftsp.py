@@ -1,0 +1,103 @@
+"""DFTSP correctness: optimality (vs exhaustive subset enumeration),
+brute-force equivalence (Table III pair), and P1 feasibility invariants
+— hypothesis property tests over random request pools.
+"""
+from __future__ import annotations
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import problem, schedulers
+from repro.core.dftsp import dftsp_schedule
+from repro.core.environment import paper_env
+from repro.core.request import Request
+
+ENV = paper_env("bloom-3b", "W8A16")
+
+
+def make_request(rid, s, n, tau, a, h):
+    return Request(rid=rid, s=s, n=n, tau=tau, a=a, h=h)
+
+
+request_st = st.builds(
+    make_request,
+    rid=st.integers(0, 10_000),
+    s=st.sampled_from([128, 256, 512]),
+    n=st.sampled_from([128, 256, 512]),
+    tau=st.floats(0.5, 2.0),
+    a=st.floats(0.0, 1.0),
+    h=st.floats(0.005, 0.08),
+)
+
+
+def pools(max_n=10):
+    return st.lists(request_st, min_size=0, max_size=max_n,
+                    unique_by=lambda r: r.rid)
+
+
+@settings(max_examples=40, deadline=None)
+@given(pools())
+def test_dftsp_batch_is_feasible(reqs):
+    sel, _ = dftsp_schedule(ENV, reqs)
+    assert problem.feasible(ENV, sel)
+
+
+@settings(max_examples=30, deadline=None)
+@given(pools(max_n=9))
+def test_dftsp_is_optimal_vs_exhaustive(reqs):
+    """|DFTSP batch| == max feasible subset size (the paper's optimality
+    claim, checked against literal subset enumeration)."""
+    sel, _ = dftsp_schedule(ENV, reqs)
+    best, _ = schedulers.exhaustive(ENV, reqs)
+    assert len(sel) == len(best)
+
+
+@settings(max_examples=20, deadline=None)
+@given(pools(max_n=10))
+def test_pruning_preserves_optimality(reqs):
+    """Brute-force tree search (no pruning/order) finds the same z with
+    at least as many visited nodes (Table III's comparison)."""
+    fast, s_fast = dftsp_schedule(ENV, reqs)
+    slow, s_slow = dftsp_schedule(ENV, reqs, prune=False, order_desc=False,
+                                  fast_z_bound=False)
+    assert len(fast) == len(slow)
+    assert s_slow.nodes_visited >= s_fast.nodes_visited
+
+
+@settings(max_examples=25, deadline=None)
+@given(pools(), st.floats(0.1, 1.0))
+def test_monotone_in_memory(reqs, shrink):
+    """Shrinking the memory budget can never increase the batch size."""
+    sel_full, _ = dftsp_schedule(ENV, reqs)
+    env_small = ENV.with_(M=ENV.M * shrink)
+    sel_small, _ = dftsp_schedule(env_small, reqs)
+    assert len(sel_small) <= len(sel_full)
+
+
+@settings(max_examples=25, deadline=None)
+@given(pools())
+def test_accuracy_filter(reqs):
+    """No selected request may exceed the quantized model's accuracy."""
+    env = paper_env("bloom-3b", "W4A16-GPTQ")   # dPPL 0.75 => f ~ 0.47
+    sel, _ = dftsp_schedule(env, reqs)
+    f = math.exp(-env.quant.delta_ppl("bloom-3b"))
+    assert all(r.a <= f + 1e-9 for r in sel)
+
+
+def test_empty_pool():
+    sel, stats = dftsp_schedule(ENV, [])
+    assert sel == [] and stats.z_solved == 0
+
+
+def test_single_feasible_request():
+    r = make_request(1, 128, 128, 2.0, 0.1, 0.05)
+    sel, _ = dftsp_schedule(ENV, [r])
+    assert len(sel) == 1
+
+
+def test_deadline_impossible_request_rejected():
+    r = make_request(1, 512, 512, 0.01, 0.1, 0.05)   # 10ms deadline
+    sel, _ = dftsp_schedule(ENV, [r])
+    assert sel == []

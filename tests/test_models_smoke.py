@@ -1,0 +1,136 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture at a
+reduced config runs one forward/train step and a prefill+decode step on
+CPU, asserting output shapes and the absence of NaNs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import REDUCTIONS, reduced_cfg
+from repro.config import assigned_archs, get_shape, applicable_shapes, get_arch
+from repro.models.api import build_model
+
+ARCHS = list(assigned_archs())
+
+
+def make_batch(cfg, B=2, S=16, with_labels=True):
+    batch = {"tokens": jnp.arange(B * S).reshape(B, S).astype(jnp.int32)
+             % cfg.vocab}
+    if with_labels:
+        batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.key(9), (B, cfg.vlm.n_img_tokens, cfg.d_model)
+        ).astype(cfg.dtype)
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.key(9), (B, cfg.encdec.n_audio_frames, cfg.d_model)
+        ).astype(cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = reduced_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, metrics = model.loss_fn(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    logits = model.forward(params, batch)
+    B, S = batch["tokens"].shape
+    S_out = S + (cfg.vlm.n_img_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_out, cfg.vocab_padded())
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    """One gradient step: finite grads, params change."""
+    cfg = reduced_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in flat), f"{arch}: non-finite grads"
+    assert any(float(jnp.max(jnp.abs(g.astype(jnp.float32)))) > 0
+               for g in flat), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode(arch):
+    cfg = reduced_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S, with_labels=False)
+    logits, cache = model.prefill(params, batch, 32)
+    assert logits.shape == (B, cfg.vocab_padded())
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    tok = jnp.argmax(logits[..., :cfg.vocab], -1)[:, None].astype(jnp.int32)
+    lg2, cache = model.decode_step(params, cache, tok, jnp.int32(S))
+    assert lg2.shape == (B, cfg.vocab_padded())
+    assert bool(jnp.all(jnp.isfinite(lg2.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "olmo-1b", "deepseek-coder-33b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Transformer prefill+decode path must agree with the full forward
+    (same tokens, same positions) — the KV-cache correctness oracle."""
+    cfg = reduced_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(5), (B, S + 1), 0, cfg.vocab)
+    full = model.forward(params, {"tokens": toks,
+                                  "labels": jnp.zeros_like(toks)})
+    logits_p, cache = model.prefill(params, {"tokens": toks[:, :S]}, S + 4)
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32),
+        np.asarray(full[:, S - 1], np.float32), rtol=2e-2, atol=2e-2)
+    lg, _ = model.decode_step(params, cache, toks[:, S:S + 1].astype(jnp.int32),
+                              jnp.int32(S))
+    np.testing.assert_allclose(
+        np.asarray(lg, np.float32), np.asarray(full[:, S], np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_applicable_shapes(arch):
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    for shape_name in applicable_shapes(cfg):
+        specs = model.input_specs(get_shape(shape_name))
+        assert "tokens" in specs
+        for v in specs.values():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_long_500k_applicability_matches_design():
+    """DESIGN.md §4: long_500k runs only for sub-quadratic archs."""
+    runs = {a for a in ARCHS
+            if "long_500k" in applicable_shapes(get_arch(a))}
+    assert runs == {"xlstm-1.3b", "zamba2-7b", "mixtral-8x22b"}
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mistral-large-123b"])
+def test_int8_kv_cache_decode_parity(arch):
+    """kv_bits=8 decode must stay within 5% of the bf16-cache logits."""
+    cfg16 = reduced_cfg(arch)
+    cfg8 = cfg16.scaled(kv_bits=8)
+    m16, m8 = build_model(cfg16), build_model(cfg8)
+    params = m16.init(jax.random.key(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(5), (B, S + 1), 0, cfg16.vocab)
+    _, c16 = m16.prefill(params, {"tokens": toks[:, :S]}, S + 4)
+    _, c8 = m8.prefill(params, {"tokens": toks[:, :S]}, S + 4)
+    step = toks[:, S:S + 1].astype(jnp.int32)
+    d16, _ = m16.decode_step(params, c16, step, jnp.int32(S))
+    d8, _ = m8.decode_step(params, c8, step, jnp.int32(S))
+    rel = float(jnp.max(jnp.abs((d8 - d16).astype(jnp.float32)))) / \
+        float(jnp.max(jnp.abs(d16.astype(jnp.float32))))
+    assert rel < 0.05, f"{arch}: int8 KV too lossy ({rel:.3f})"

@@ -1,0 +1,73 @@
+"""Multi-LLM edge node (paper §II's multi-model remark, beyond-paper)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import comm, problem
+from repro.core.environment import paper_env
+from repro.core.multi import MultiLLMEnv, multi_dftsp, tag
+from repro.core.request import RequestGenerator
+
+
+def make_menv():
+    return MultiLLMEnv.host({
+        "bloom-3b": paper_env("bloom-3b", "W8A16"),
+        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+    })
+
+
+def make_pool(seed=0, rate=20):
+    gen = RequestGenerator(rate=rate, seed=seed)
+    reqs = gen.within(0, 2.0)
+    half = len(reqs) // 2
+    return tag(reqs[:half], "bloom-3b") + tag(reqs[half:], "bloom-7b1")
+
+
+def test_schedules_both_models():
+    sched, stats = multi_dftsp(make_menv(), make_pool(seed=1, rate=40))
+    assert stats.z_solved == sum(len(v) for v in sched.values())
+    assert stats.z_solved > 0
+
+
+def test_shared_bandwidth_respected():
+    menv = make_menv()
+    sched, _ = multi_dftsp(menv, make_pool(seed=2, rate=60))
+    all_sel = [r for v in sched.values() for r in v]
+    env = menv.envs["bloom-3b"]
+    assert sum(comm.rho_min_up(env, r) for r in all_sel) <= 1.0 + 1e-9
+    assert sum(comm.rho_min_down(env, r) for r in all_sel) <= 1.0 + 1e-9
+
+
+def test_shared_memory_respected():
+    menv = make_menv()
+    sched, _ = multi_dftsp(menv, make_pool(seed=3, rate=60))
+    used = menv.weight_bytes()
+    for mid, batch in sched.items():
+        env = menv.envs[mid]
+        cm = env.cost_model()
+        used += env.quant.alpha_a * (
+            cm.kv_bytes_prefill(env.s_max, len(batch))
+            + cm.kv_bytes_decode([r.n for r in batch], env.s_max))
+    assert used <= menv.M + 1e-6
+
+
+def test_per_model_batches_meet_deadlines():
+    menv = make_menv()
+    sched, _ = multi_dftsp(menv, make_pool(seed=4, rate=40))
+    t_queued = 0.0
+    for mid in sorted(menv.envs,
+                      key=lambda m: menv.envs[m].cost_model().weight_bytes()):
+        batch = sched[mid]
+        env = menv.envs[mid]
+        if batch:
+            t = problem.batch_compute_time(env, batch)
+            for r in batch:
+                assert r.t_w + env.T_U + t_queued + t + env.T_D \
+                    <= r.tau + 1e-9
+            t_queued += t
+
+
+def test_requests_only_on_their_model():
+    sched, _ = multi_dftsp(make_menv(), make_pool(seed=5))
+    for mid, batch in sched.items():
+        assert all(r.model_id == mid for r in batch)

@@ -1,0 +1,94 @@
+"""PTQ substrate: roundtrip error bounds, int4 packing inverse, pytree
+quantization invariants — hypothesis property tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (dequantize, pack_int4, quantize, quantize_tree,
+                         tree_bytes, unpack_int4)
+from repro.quant.ptq import INT4_MAX, INT8_MAX, dequantize_tree
+
+
+shapes = st.tuples(st.integers(1, 6), st.integers(2, 65),
+                   st.integers(1, 40))
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes, st.sampled_from([4, 8]), st.integers(0, 2 ** 31 - 1))
+def test_roundtrip_error_bound(shape, bits, seed):
+    """|w - dq(q(w))| <= scale/2 elementwise (symmetric RTN guarantee)."""
+    w = jax.random.normal(jax.random.key(seed), shape)
+    t = quantize(w, bits)
+    wd = dequantize(t)
+    qmax = INT4_MAX if bits == 4 else INT8_MAX
+    bound = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / qmax * 0.5 + 1e-7
+    assert bool(jnp.all(jnp.abs(wd - w) <= bound + 1e-6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 31), st.integers(1, 33), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_inverse(rows2, cols, seed):
+    q = jax.random.randint(jax.random.key(seed), (rows2 * 2, cols), -8, 8,
+                           jnp.int8)
+    assert bool(jnp.all(unpack_int4(pack_int4(q)) == q))
+
+
+def test_quantize_preserves_leading_axes():
+    w = jax.random.normal(jax.random.key(0), (3, 4, 32, 16))
+    for bits, rows in ((8, 32), (4, 16)):
+        t = quantize(w, bits)
+        assert t.q.shape == (3, 4, rows, 16)
+        assert t.scale.shape == (3, 4, 1, 16)
+        assert dequantize(t).shape == w.shape
+
+
+def test_quantize_tree_only_matmul_keys():
+    params = {"layers": {"wq": jnp.ones((4, 8, 8)),
+                         "norm1": jnp.ones((4, 8))},
+              "embed": jnp.ones((16, 8)),
+              "final_norm": jnp.ones((8,))}
+    qt = quantize_tree(params, 8)
+    from repro.quant import QTensor
+    assert isinstance(qt["layers"]["wq"], QTensor)
+    assert isinstance(qt["embed"], QTensor)
+    assert isinstance(qt["layers"]["norm1"], jax.Array)   # untouched
+    assert isinstance(qt["final_norm"], jax.Array)
+
+
+def test_alpha_near_bits_ratio():
+    """Measured alpha ~ bits/16 (paper's memory model), scale overhead small."""
+    params = {"wq": jax.random.normal(jax.random.key(0), (512, 512),
+                                      jnp.bfloat16),
+              "w1": jax.random.normal(jax.random.key(1), (512, 2048),
+                                      jnp.bfloat16)}
+    fp = tree_bytes(params)
+    for bits, target in ((8, 0.5), (4, 0.25)):
+        alpha = tree_bytes(quantize_tree(params, bits)) / fp
+        assert abs(alpha - target) < 0.02
+
+
+def test_dequantize_tree_roundtrip_close():
+    params = {"wq": jax.random.normal(jax.random.key(0), (64, 64))}
+    deq = dequantize_tree(quantize_tree(params, 8))
+    err = float(jnp.max(jnp.abs(deq["wq"] - params["wq"])))
+    assert err < float(jnp.max(jnp.abs(params["wq"]))) / INT8_MAX
+
+
+def test_scan_slicing_qtensor():
+    """Stacked QTensors must slice layer-by-layer under lax.scan."""
+    from repro.models.common import mm
+    w = jax.random.normal(jax.random.key(0), (3, 16, 8))     # (L, K, N)
+    t = quantize(w, 8)
+    x = jax.random.normal(jax.random.key(1), (2, 16))
+
+    def body(carry, wl):
+        return carry + mm(x, wl), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((2, 8)), t)
+    want = sum(x @ w[i] for i in range(3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=0.05, atol=0.05)

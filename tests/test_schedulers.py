@@ -1,0 +1,79 @@
+"""Baseline schedulers + epoch simulation (paper §IV mechanics)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import problem, schedulers
+from repro.core.environment import paper_env, tpu_env
+from repro.core.epoch import simulate, sweep
+from repro.core.request import Request, RequestGenerator
+
+ENV = paper_env("bloom-3b", "W8A16")
+
+
+def test_static_batch_size_is_feasible_worst_case():
+    B = schedulers.static_batch_size(ENV)
+    assert B >= 1
+    worst = [Request(i, 512, 512, 10.0, 0.0, 0.05) for i in range(B)]
+    cm = ENV.cost_model()
+    q = ENV.quant
+    mem = (q.alpha_w * cm.weight_bytes()
+           + q.alpha_a * (cm.kv_bytes_prefill(ENV.s_max, B)
+                          + cm.kv_bytes_decode([512] * B, ENV.s_max)))
+    assert mem <= ENV.M
+
+
+def test_every_scheduler_returns_feasible(seed=1):
+    gen = RequestGenerator(rate=30, seed=seed)
+    reqs = gen.within(0, 2.0)
+    for name in ("dftsp", "stb", "greedy", "brute_force"):
+        sel, _ = schedulers.get_scheduler(name)(ENV, reqs)
+        assert problem.feasible(ENV, sel), name
+    sel, _ = schedulers.no_batching(ENV, reqs)
+    assert schedulers.nob_feasible(ENV, sel)
+
+
+def test_dftsp_dominates_heuristics():
+    """Across seeds, the optimal scheduler can never lose to StB/NoB/greedy."""
+    for seed in range(5):
+        gen = RequestGenerator(rate=25, seed=seed)
+        reqs = gen.within(0, 2.0)
+        z_opt = len(schedulers.dftsp(ENV, reqs)[0])
+        for name in ("stb", "greedy"):
+            z = len(schedulers.get_scheduler(name)(ENV, reqs)[0])
+            assert z <= z_opt, (name, seed)
+
+
+def test_simulation_deterministic():
+    r1 = simulate(ENV, "dftsp", rate=10, n_epochs=5, seed=7)
+    r2 = simulate(ENV, "dftsp", rate=10, n_epochs=5, seed=7)
+    assert r1.served == r2.served and r1.nodes_visited == r2.nodes_visited
+
+
+def test_simulation_conservation():
+    res = simulate(ENV, "dftsp", rate=10, n_epochs=8, seed=0)
+    assert res.served + res.dropped <= res.arrived + 64  # queue remainder
+    assert res.throughput >= 0
+
+
+def test_paper_fig5a_ordering():
+    """DFTSP >= StB and >= NoB in served throughput (Fig. 5a claim)."""
+    out = sweep(ENV, ["dftsp", "stb", "nob"], rates=[20], n_epochs=10)
+    thr = {k: v[0].throughput for k, v in out.items()}
+    assert thr["dftsp"] >= thr["stb"]
+    assert thr["dftsp"] >= thr["nob"]
+
+
+def test_table3_pruning_reduces_nodes():
+    res_fast = simulate(ENV, "dftsp", rate=20, n_epochs=6, seed=3)
+    res_slow = simulate(ENV, "brute_force", rate=20, n_epochs=6, seed=3)
+    assert res_fast.served == res_slow.served       # same optimum
+    assert res_fast.nodes_visited < res_slow.nodes_visited
+
+
+def test_tpu_env_higher_throughput_than_paper_env():
+    """A v5e-16 slice has ~100x the FLOPs of 20 Jetson TX2s."""
+    env_tpu = tpu_env("bloom-3b", chips=16)
+    r_paper = simulate(ENV, "dftsp", rate=40, n_epochs=6, seed=0)
+    r_tpu = simulate(env_tpu, "dftsp", rate=40, n_epochs=6, seed=0)
+    assert r_tpu.served >= r_paper.served

@@ -1,0 +1,58 @@
+"""Serving engine + end-to-end DFTSP-driven serving."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.environment import paper_env
+from repro.serving.engine import ServingEngine
+from repro.serving.simulator import serve_epochs
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced_cfg("bloom-3b")
+    return ServingEngine(cfg, batch_capacity=4, s_max=32, n_max=8)
+
+
+def test_generate_shapes(engine):
+    res = engine.generate([[1, 2, 3], [4, 5, 6, 7]], n_tokens=[5, 8])
+    assert res.tokens.shape == (2, 8)
+    assert res.lengths[0] <= 5 and res.lengths[1] <= 8
+    assert res.batch == 2
+
+
+def test_generate_respects_caps(engine):
+    res = engine.generate([[1, 2, 3]], n_tokens=[3])
+    assert res.lengths[0] <= 3
+    assert np.all(res.tokens[0, 3:] == 0)
+
+
+def test_generate_deterministic(engine):
+    a = engine.generate([[5, 6, 7]], n_tokens=[6])
+    b = engine.generate([[5, 6, 7]], n_tokens=[6])
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_quantized_engine_runs():
+    cfg = reduced_cfg("bloom-3b")
+    eng = ServingEngine(cfg, batch_capacity=2, s_max=16, n_max=4,
+                        quant_bits=8)
+    res = eng.generate([[1, 2, 3]], n_tokens=[4])
+    assert res.tokens.shape == (1, 4)
+
+
+def test_pad_prompts_right_aligned(engine):
+    out = engine.pad_prompts([[7, 8, 9]])
+    assert out.shape == (4, 32)
+    assert list(out[0, -3:]) == [7, 8, 9]
+    assert out[0, :-3].sum() == 0
+
+
+def test_serve_epochs_end_to_end(engine):
+    env = paper_env("bloom-3b", "W8A16")
+    trace = serve_epochs(env, engine, "dftsp", rate=5, n_epochs=3, seed=0)
+    assert trace.epochs == 3
+    assert trace.served >= 0
+    assert len(trace.batches) == 3
