@@ -10,7 +10,8 @@ from __future__ import annotations
 
 from benchmarks.common import render, save_table
 from repro.core.environment import paper_env
-from repro.core.epoch import simulate
+from repro.core.policy import get_policy
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 RATES = [5, 10, 25, 50, 100, 250]
 SCHEDS = ["dftsp", "stb", "nob"]
@@ -24,7 +25,8 @@ def run(n_epochs: int = 20, seed: int = 0, quiet: bool = False):
         for rate in RATES:
             row = [model, rate]
             for s in SCHEDS:
-                res = simulate(env, s, rate, n_epochs=n_epochs, seed=seed)
+                runtime = EpochRuntime(env, get_policy(s), AnalyticExecutor())
+                res = runtime.run(rate=rate, n_epochs=n_epochs, seed=seed)
                 row.append(round(res.throughput, 3))
             rows.append(row)
     header = ["model", "rate", *SCHEDS]

@@ -7,8 +7,9 @@ from __future__ import annotations
 
 from benchmarks.common import render, save_table
 from repro.core.environment import paper_env
-from repro.core.epoch import simulate
+from repro.core.policy import get_policy
 from repro.core.request import RequestGenerator
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 # the paper's tau domain is [0.5, 2.0]; beyond it NoB overtakes batching
 # (lone requests run unpadded => cheaper per the paper's own cost model) —
@@ -27,8 +28,8 @@ def run(n_epochs: int = 20, seed: int = 0, quiet: bool = False):
             row = [model, f"{tau[0]}-{tau[1]}s"]
             for s in SCHEDS:
                 gen = RequestGenerator(rate=RATE, seed=seed, tau_range=tau)
-                res = simulate(env, s, RATE, n_epochs=n_epochs, seed=seed,
-                               gen=gen)
+                runtime = EpochRuntime(env, get_policy(s), AnalyticExecutor())
+                res = runtime.run(n_epochs=n_epochs, seed=seed, gen=gen)
                 row.append(round(res.throughput, 3))
             rows.append(row)
     header = ["model", "tau", *SCHEDS]

@@ -7,8 +7,9 @@ from __future__ import annotations
 
 from benchmarks.common import render, save_table
 from repro.core.environment import paper_env
-from repro.core.epoch import simulate
+from repro.core.policy import get_policy
 from repro.core.request import RequestGenerator
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 METHODS = ["W16A16", "W8A16", "W4A16-GPTQ"]
 MODELS = ["bloom-3b", "bloom-7b1", "opt-13b"]
@@ -23,8 +24,9 @@ def run(n_epochs: int = 16, seed: int = 0, quiet: bool = False):
             env = paper_env(model, m)
             # accuracy ignored in 6a: all users accept any dPPL
             gen = RequestGenerator(rate=RATE, seed=seed, acc_range=(0.0, 0.0))
-            res = simulate(env, "dftsp", RATE, n_epochs=n_epochs, seed=seed,
-                           gen=gen)
+            runtime = EpochRuntime(env, get_policy("dftsp"),
+                                   AnalyticExecutor())
+            res = runtime.run(n_epochs=n_epochs, seed=seed, gen=gen)
             row.append(round(res.throughput, 3))
         rows.append(row)
     header = ["model", *METHODS]

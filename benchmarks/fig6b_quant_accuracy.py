@@ -11,8 +11,9 @@ import math
 
 from benchmarks.common import render, save_table
 from repro.core.environment import paper_env
-from repro.core.epoch import simulate
+from repro.core.policy import get_policy
 from repro.core.request import RequestGenerator
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 ACC_CAPS = [0.9, 0.7, 0.5, 0.3, 0.0]     # max accuracy demand in the pool
 MODELS = ["bloom-3b", "opt-13b"]
@@ -28,8 +29,9 @@ def run(n_epochs: int = 16, seed: int = 0, quiet: bool = False):
                 env = paper_env(model, method)
                 gen = RequestGenerator(rate=RATE, seed=seed,
                                        acc_range=(0.0, cap))
-                res = simulate(env, "dftsp", RATE, n_epochs=n_epochs,
-                               seed=seed, gen=gen)
+                runtime = EpochRuntime(env, get_policy("dftsp"),
+                                       AnalyticExecutor())
+                res = runtime.run(n_epochs=n_epochs, seed=seed, gen=gen)
                 row.append(round(res.throughput, 3))
             rows.append(row)
     header = ["model", "max_acc_demand", "GPTQ", "ZQ-Local", "W8A16(ref)"]

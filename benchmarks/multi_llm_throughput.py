@@ -4,38 +4,52 @@ One EN hosts BLOOM-3B + BLOOM-7.1B; the request stream splits between
 them.  Shows the joint scheduler's behaviour as heavy-model traffic
 grows — the single-T_C queueing cost the paper's single-model framing
 never surfaces.
+
+Runs through the SAME EpochRuntime as every single-model benchmark:
+``multi-dftsp`` is a registered SchedulerPolicy, so the multi-LLM node
+gets queue carryover, aging and viability drops for free.
 """
 from __future__ import annotations
 
 from benchmarks.common import render, save_table
 from repro.core.environment import paper_env
-from repro.core.multi import MultiLLMEnv, multi_dftsp, tag
-from repro.core.request import RequestGenerator
+from repro.core.multi import MultiLLMEnv
+from repro.core.policy import get_policy
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 SPLITS = [0.0, 0.25, 0.5, 0.75, 1.0]     # fraction of traffic to 7.1B
 RATE = 40
+MODELS = ("bloom-3b", "bloom-7b1")
 
 
 def run(n_epochs: int = 10, seed: int = 0, quiet: bool = False):
-    menv = MultiLLMEnv.host({
-        "bloom-3b": paper_env("bloom-3b", "W8A16"),
-        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
-    })
+    menv = MultiLLMEnv.host({m: paper_env(m, "W8A16") for m in MODELS})
+    policy = get_policy("multi-dftsp")
     rows = []
     for split in SPLITS:
-        served = {"bloom-3b": 0, "bloom-7b1": 0}
-        gen = RequestGenerator(rate=RATE, seed=seed)
-        for e in range(n_epochs):
-            reqs = gen.within(e * 2.0, (e + 1) * 2.0)
-            cut = int(len(reqs) * (1 - split))
-            pool = tag(reqs[:cut], "bloom-3b") + tag(reqs[cut:], "bloom-7b1")
-            sched, _ = multi_dftsp(menv, pool)
-            for mid, batch in sched.items():
-                served[mid] += len(batch)
-        total = sum(served.values())
-        rows.append([f"{split:.2f}", served["bloom-3b"],
-                     served["bloom-7b1"], total,
-                     round(total / (n_epochs * 2.0), 2)])
+        owner = {}
+
+        def tagger(arrivals, split=split, owner=owner):
+            # rid-stride split: unbiased in arrival time (an index slice
+            # would hand one model only the oldest requests, since
+            # arrivals are time-sorted)
+            for r in arrivals:
+                r.model_id = MODELS[1] if r.rid % 4 < round(split * 4) \
+                    else MODELS[0]
+                owner[r.rid] = r.model_id
+            return arrivals
+
+        m = EpochRuntime(menv, policy, AnalyticExecutor()).run(
+            rate=RATE, n_epochs=n_epochs, seed=seed, warmup_epochs=0,
+            tag_arrivals=tagger)
+        served = {mid: 0 for mid in MODELS}
+        for t in m.traces:
+            if not t.counted:
+                continue
+            for rid in t.selected_rids:
+                served[owner[rid]] += 1
+        rows.append([f"{split:.2f}", served[MODELS[0]], served[MODELS[1]],
+                     m.served, round(m.throughput, 2)])
     header = ["frac_to_7b1", "served_3b", "served_7b1", "total", "req/s"]
     out = render(header, rows, "Multi-LLM node: throughput vs traffic split")
     if not quiet:

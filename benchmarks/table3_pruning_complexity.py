@@ -14,7 +14,8 @@ from __future__ import annotations
 from benchmarks.common import render, save_table
 from repro.core.dftsp import dftsp_schedule
 from repro.core.environment import paper_env
-from repro.core.epoch import simulate
+from repro.core.policy import CallablePolicy
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 RATES = [10, 50, 100, 200]
 POOL_CAP = 36
@@ -38,8 +39,10 @@ def run(n_epochs: int = 6, seed: int = 0, quiet: bool = False):
     env = paper_env("bloom-3b", "W8A16")
     rows = []
     for rate in RATES:
-        fast = simulate(env, _fast, rate, n_epochs=n_epochs, seed=seed)
-        slow = simulate(env, _slow, rate, n_epochs=n_epochs, seed=seed)
+        fast = EpochRuntime(env, CallablePolicy(_fast), AnalyticExecutor()) \
+            .run(rate=rate, n_epochs=n_epochs, seed=seed)
+        slow = EpochRuntime(env, CallablePolicy(_slow), AnalyticExecutor()) \
+            .run(rate=rate, n_epochs=n_epochs, seed=seed)
         assert fast.served == slow.served, "pruning changed the optimum!"
         red = 1.0 - fast.nodes_visited / max(slow.nodes_visited, 1)
         rows.append([rate, slow.nodes_visited, fast.nodes_visited,

@@ -1,9 +1,11 @@
 """Multi-LLM edge node: one EN hosting BLOOM-3B + BLOOM-7.1B (paper §II's
 "adaptable for multiple LLMs" remark, made concrete).
 
-Requests arrive tagged for a model; the joint scheduler runs DFTSP per
-model against the SHARED memory/compute/spectrum budgets, with earlier
-batches' compute queueing in front of later ones (single T_C slot).
+Requests arrive tagged for a model (``Request.model_id``); the joint
+``multi-dftsp`` policy — built from the same registry as the single-model
+schedulers — runs DFTSP per model against the SHARED
+memory/compute/spectrum budgets, with earlier batches' compute queueing
+in front of later ones (single T_C slot).
 
   PYTHONPATH=src python examples/multi_llm_node.py
 """
@@ -11,7 +13,8 @@ from __future__ import annotations
 
 from repro.core import problem
 from repro.core.environment import paper_env
-from repro.core.multi import MultiLLMEnv, multi_dftsp, tag
+from repro.core.multi import MultiLLMEnv, tag
+from repro.core.policy import get_policy
 from repro.core.request import RequestGenerator
 
 
@@ -30,8 +33,11 @@ def main():
     print(f"{len(pool)} requests in one epoch "
           f"({half} -> bloom-3b, {len(pool) - half} -> bloom-7b1)")
 
-    sched, stats = multi_dftsp(menv, pool)
-    for mid, batch in sched.items():
+    policy = get_policy("multi-dftsp:order=weight")
+    decision = policy.schedule(menv, pool)
+    assert policy.validate(menv, decision)
+    stats = decision.stats
+    for mid, batch in decision.batches.items():
         env = menv.envs[mid]
         t = problem.batch_compute_time(env, batch) if batch else 0.0
         print(f"  {mid:10s}: {len(batch):2d} scheduled, "
@@ -40,9 +46,9 @@ def main():
           f"({stats.nodes_visited} nodes searched)")
 
     # contrast: the same node dedicating everything to one model
-    solo, _ = multi_dftsp(MultiLLMEnv.host(
+    solo = policy.schedule(MultiLLMEnv.host(
         {"bloom-3b": menv.envs["bloom-3b"]}), tag(list(reqs), "bloom-3b"))
-    print(f"(single-model reference: {sum(map(len, solo.values()))} "
+    print(f"(single-model reference: {solo.size} "
           f"of the same {len(reqs)} requests)")
 
 

@@ -4,6 +4,9 @@ Multi-epoch serving of a small model with batched requests: Poisson
 arrivals -> queue aging + deadline drops -> DFTSP schedule -> real batched
 prefill+decode on JAX with quantized weights -> per-epoch accounting.
 
+Both the real-engine run and the analytic cross-check drive the SAME
+``EpochRuntime`` control loop — only the Executor differs.
+
   PYTHONPATH=src python examples/serve_edge.py [--epochs 6] [--rate 12]
 """
 from __future__ import annotations
@@ -12,9 +15,10 @@ import argparse
 
 from repro.config import get_arch
 from repro.core.environment import paper_env
-from repro.core.epoch import simulate
+from repro.core.policy import get_policy
 from repro.serving.engine import ServingEngine
-from repro.serving.simulator import serve_epochs
+from repro.serving.runtime import (AnalyticExecutor, EngineExecutor,
+                                   EpochRuntime)
 
 
 def main():
@@ -26,22 +30,27 @@ def main():
     args = ap.parse_args()
 
     env = paper_env("bloom-3b", "W8A16")
+    policy = get_policy(args.scheduler)
     cfg = get_arch("bloom-3b").scaled(n_layers=2, d_model=256, n_heads=8,
                                       n_kv_heads=8, d_ff=1024, vocab=2048)
     engine = ServingEngine(cfg, batch_capacity=8, s_max=64, n_max=16,
                            quant_bits=args.quant_bits)
 
     print(f"[serve_edge] executing {args.epochs} epochs at rate "
-          f"{args.rate}/s with {args.scheduler} (W{args.quant_bits or 16})")
-    trace = serve_epochs(env, engine, args.scheduler, args.rate,
-                         n_epochs=args.epochs, seed=0)
+          f"{args.rate}/s with {policy.spec} (W{args.quant_bits or 16})")
+    runtime = EpochRuntime(env, policy, EngineExecutor(engine, seed=0))
+    trace = runtime.run(rate=args.rate, n_epochs=args.epochs, seed=0,
+                        warmup_epochs=0)
     print(f"  served      : {trace.served} requests")
     print(f"  tokens      : {trace.generated_tokens}")
-    print(f"  batch sizes : {trace.batches}")
-    print(f"  throughput  : {trace.throughput:.2f} req/epoch")
+    print(f"  batch sizes : {trace.batch_sizes}")
+    print(f"  truncated   : {trace.truncated} (spilled past engine capacity)")
+    print(f"  throughput  : {trace.throughput:.2f} req/s")
 
-    # cross-check against the long-horizon analytic simulation
-    res = simulate(env, args.scheduler, args.rate, n_epochs=30, seed=0)
+    # cross-check against the long-horizon analytic simulation (same loop,
+    # AnalyticExecutor data plane)
+    res = EpochRuntime(env, policy, AnalyticExecutor()).run(
+        rate=args.rate, n_epochs=30, seed=0)
     print(f"[analytic 30-epoch] throughput {res.throughput:.2f} req/s, "
           f"mean batch {res.mean_batch:.1f}, dropped {res.dropped}")
 

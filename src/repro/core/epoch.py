@@ -1,117 +1,53 @@
-"""Epoch-driven simulation of the edge node (paper Fig. 2 + §IV).
+"""Analytic epoch simulation — deprecation shims over the unified runtime.
 
-Time is divided into epochs of ``T_E`` seconds.  Requests arriving during
-epoch e are aggregated and considered for scheduling at the start of epoch
-e+1 (their waiting time ``t_w`` = time from arrival to that epoch boundary,
-growing by T_E for every epoch they remain queued).  Unscheduled requests
-stay in the queue until their deadline can no longer be met, then drop.
+The epoch/queue lifecycle (paper Fig. 2 + §IV) lives in exactly one
+place now: ``repro.serving.runtime.EpochRuntime``, parameterized by a
+``SchedulerPolicy`` (control plane) and an ``Executor`` (data plane).
+``simulate`` / ``sweep`` below are thin shims that pair a policy with the
+``AnalyticExecutor`` — they keep every historical figure driver working
+and return the unified ``EpochMetrics`` (of which ``SimResult`` is a
+deprecated alias; throughput is requests/second, the paper's objective).
 
-``simulate`` runs a scheduler for ``n_epochs`` and reports throughput
-(successfully served requests / second — the paper's objective), drops,
-batch-size stats and cumulative search-node counts (Table III).
+Prefer the runtime directly in new code::
+
+    from repro.core.policy import get_policy
+    from repro.serving.runtime import AnalyticExecutor, EpochRuntime
+
+    metrics = EpochRuntime(env, get_policy("dftsp"),
+                           AnalyticExecutor()).run(rate=25, n_epochs=30)
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
-from repro.core import problem
-from repro.core.dftsp import SearchStats
 from repro.core.environment import EdgeEnv
-from repro.core.request import Request, RequestGenerator
-from repro.core.schedulers import Scheduler, get_scheduler, nob_feasible
+from repro.core.metrics import EpochMetrics
+from repro.core.policy import SchedulerPolicy
+from repro.core.request import RequestGenerator
+from repro.core.schedulers import Scheduler
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime, still_viable
+
+# Deprecated aliases (pre-redesign names).
+SimResult = EpochMetrics
+_still_viable = still_viable
 
 
-@dataclass
-class SimResult:
-    n_epochs: int
-    T_E: float
-    served: int = 0
-    dropped: int = 0
-    arrived: int = 0
-    batch_sizes: List[int] = field(default_factory=list)
-    nodes_visited: int = 0
-    leaves_checked: int = 0
-
-    @property
-    def throughput(self) -> float:
-        """Requests served per second (paper objective, aggregated)."""
-        return self.served / (self.n_epochs * self.T_E)
-
-    @property
-    def mean_batch(self) -> float:
-        bs = self.batch_sizes
-        return sum(bs) / len(bs) if bs else 0.0
-
-    def row(self) -> Dict[str, float]:
-        return {"throughput": self.throughput, "served": self.served,
-                "dropped": self.dropped, "arrived": self.arrived,
-                "mean_batch": self.mean_batch,
-                "nodes": self.nodes_visited}
-
-
-def _still_viable(env: EdgeEnv, r: Request, now: float) -> bool:
-    """Could this queued request still meet its deadline if scheduled at the
-    *next* epoch boundary?  Lower bound: comm slots + its lone compute at
-    its true prompt length (<= any batched/padded execution)."""
-    t_w = now - r.arrival
-    cm = env.cost_model()
-    lone = env.quant.beta * (cm.prefill_flops(r.s, 1)
-                             + cm.decode_flops(r.s, [r.n])) / env.C
-    return t_w + env.T_U + lone + env.T_D <= r.tau + 1e-12
-
-
-def simulate(env: EdgeEnv, scheduler: str | Scheduler,
+def simulate(env: EdgeEnv,
+             scheduler: Union[str, Scheduler, SchedulerPolicy],
              rate: float, n_epochs: int = 30, seed: int = 0,
              gen: Optional[RequestGenerator] = None,
-             warmup_epochs: int = 1) -> SimResult:
-    """Run the epoch protocol with Poisson(rate) arrivals."""
-    sched = get_scheduler(scheduler) if isinstance(scheduler, str) else scheduler
-    gen = gen or RequestGenerator(rate=rate, seed=seed,
-                                  lengths=(128, 256, 512))
-    res = SimResult(n_epochs=n_epochs, T_E=env.T_E)
-    queue: List[Request] = []
-
-    for e in range(n_epochs + warmup_epochs):
-        t0, t1 = e * env.T_E, (e + 1) * env.T_E
-        counting = e >= warmup_epochs
-        # requests that arrived during the previous epoch join the queue
-        arrivals = gen.within(t0 - env.T_E, t0) if e else []
-        if counting:
-            res.arrived += len(arrivals)
-        queue.extend(arrivals)
-
-        # age the queue; drop hopeless requests
-        viable: List[Request] = []
-        for r in queue:
-            r.t_w = t0 - r.arrival
-            if _still_viable(env, r, t0):
-                viable.append(r)
-            elif counting:
-                res.dropped += 1
-        queue = viable
-
-        sel, stats = sched(env, queue)
-        # authoritative feasibility recheck (schedulers must not cheat);
-        # NoB is per-unit (no batch), all others must satisfy P1.
-        is_nob = scheduler == "nob" or getattr(sched, "__name__", "") == \
-            "no_batching"
-        ok = nob_feasible(env, sel) if is_nob else problem.feasible(env, sel)
-        assert ok, f"{scheduler} returned an infeasible batch"
-        if counting:
-            res.served += len(sel)
-            res.batch_sizes.append(len(sel))
-            res.nodes_visited += stats.nodes_visited
-            res.leaves_checked += stats.leaves_checked
-        chosen = {r.rid for r in sel}
-        queue = [r for r in queue if r.rid not in chosen]
-    return res
+             warmup_epochs: int = 1) -> EpochMetrics:
+    """Deprecated shim: run the epoch protocol analytically (cost-model
+    time only).  Delegates to ``EpochRuntime`` + ``AnalyticExecutor``."""
+    runtime = EpochRuntime(env, scheduler, AnalyticExecutor())
+    return runtime.run(rate=rate, n_epochs=n_epochs, seed=seed, gen=gen,
+                       warmup_epochs=warmup_epochs)
 
 
 def sweep(env: EdgeEnv, schedulers: List[str], rates: List[float],
-          n_epochs: int = 20, seed: int = 0) -> Dict[str, List[SimResult]]:
-    """Throughput-vs-arrival-rate sweep (paper Fig. 5a driver)."""
-    out: Dict[str, List[SimResult]] = {s: [] for s in schedulers}
+          n_epochs: int = 20, seed: int = 0) -> Dict[str, List[EpochMetrics]]:
+    """Deprecated shim: throughput-vs-arrival-rate sweep (Fig. 5a)."""
+    out: Dict[str, List[EpochMetrics]] = {s: [] for s in schedulers}
     for s in schedulers:
         for rate in rates:
             out[s].append(simulate(env, s, rate, n_epochs=n_epochs,

@@ -1,0 +1,71 @@
+"""Unified epoch-protocol metrics (analytic sim AND real-engine serving).
+
+``EpochMetrics`` replaces the two historical records — ``SimResult``
+(core/epoch.py, analytic) and ``ServeTrace`` (serving/simulator.py, real
+engine) — which disagreed on units: SimResult reported requests/second
+while ServeTrace divided by epoch *count*.  Both names are kept as
+deprecated aliases of this class; ``throughput`` is requests/second
+everywhere (the paper's objective).
+
+Per-epoch accounting lives in ``traces`` so executor-equivalence tests can
+compare scheduling decisions epoch by epoch, not just aggregates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class EpochTrace:
+    """One epoch of the runtime loop (warmup epochs have counted=False)."""
+    epoch: int
+    arrived: int
+    dropped: int
+    selected_rids: List[int]
+    truncated: int = 0
+    nodes_visited: int = 0
+    generated_tokens: int = 0
+    counted: bool = True
+
+
+@dataclass
+class EpochMetrics:
+    n_epochs: int
+    T_E: float
+    served: int = 0
+    dropped: int = 0
+    arrived: int = 0
+    truncated: int = 0            # scheduled but spilled past engine capacity
+    generated_tokens: int = 0     # real-engine paths only (0 for analytic)
+    batch_sizes: List[int] = field(default_factory=list)
+    nodes_visited: int = 0
+    leaves_checked: int = 0
+    traces: List[EpochTrace] = field(default_factory=list)
+
+    @property
+    def throughput(self) -> float:
+        """Requests served per second (paper objective) — in BOTH the
+        analytic and the real-engine path."""
+        return self.served / max(self.n_epochs * self.T_E, 1e-12)
+
+    @property
+    def mean_batch(self) -> float:
+        bs = self.batch_sizes
+        return sum(bs) / len(bs) if bs else 0.0
+
+    # -- ServeTrace compatibility -------------------------------------------
+
+    @property
+    def epochs(self) -> int:
+        return self.n_epochs
+
+    @property
+    def batches(self) -> List[int]:
+        return self.batch_sizes
+
+    def row(self) -> Dict[str, float]:
+        return {"throughput": self.throughput, "served": self.served,
+                "dropped": self.dropped, "arrived": self.arrived,
+                "mean_batch": self.mean_batch,
+                "nodes": self.nodes_visited}

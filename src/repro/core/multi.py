@@ -2,14 +2,14 @@
 approach is adaptable for multiple LLMs").
 
 The EN hosts M quantized models sharing one memory pool, one compute
-budget and one OFDMA spectrum; each request targets a model
-(``Request.model_id`` via the ``tag`` trick below).  Within an epoch the
+budget and one OFDMA spectrum; each request targets a model via the
+``Request.model_id`` field (``tag`` is a convenience).  Within an epoch the
 scheduled batches execute sequentially in a fixed model order, so a
 request's latency includes every earlier model's batch compute (faithful
 to the single-compute-slot protocol of Fig. 2).
 
-``multi_dftsp`` schedules jointly: models are visited in
-shortest-batch-first order and each runs the paper's DFTSP against the
+``multi_dftsp`` schedules jointly: models are visited in a configurable
+order (cheapest-weights first by default) and each runs the paper's DFTSP against the
 RESIDUAL budgets (memory already committed by earlier models, bandwidth
 fractions consumed, compute time already queued).  This is a
 beyond-paper heuristic — per-model DFTSP is optimal for its residual
@@ -37,9 +37,21 @@ class MultiLLMEnv:
     @classmethod
     def host(cls, envs: Dict[str, EdgeEnv]) -> "MultiLLMEnv":
         any_env = next(iter(envs.values()))
+        epochs = {e.T_E for e in envs.values()}
+        if len(epochs) > 1:        # one epoch grid drives the whole node
+            raise ValueError(f"hosted models disagree on T_E: {epochs}")
         return cls(envs={k: v.with_(C=any_env.C, M=any_env.M)
                          for k, v in envs.items()},
                    C=any_env.C, M=any_env.M)
+
+    @property
+    def T_E(self) -> float:
+        """Epoch duration shared by every hosted deployment."""
+        return next(iter(self.envs.values())).T_E
+
+    def env_for(self, r: Request) -> EdgeEnv | None:
+        """Single-model view serving this request (None if untargeted)."""
+        return self.envs.get(r.model_id)
 
     def weight_bytes(self) -> float:
         """Resident weights of every hosted model (always in memory)."""
@@ -48,10 +60,30 @@ class MultiLLMEnv:
 
 
 def tag(requests: Sequence[Request], model_id: str) -> List[Request]:
-    """Mark requests as targeting one hosted model."""
+    """Set ``Request.model_id`` on each request (thin compat wrapper)."""
     for r in requests:
-        r.model_id = model_id          # type: ignore[attr-defined]
+        r.model_id = model_id
     return list(requests)
+
+
+def model_order(menv: MultiLLMEnv, order: str = "weight") -> List[str]:
+    """Model visit order for the sequential compute slot.
+
+    * ``weight`` — cheapest resident weights first (default: its requests
+      lose the least slack to queueing behind other models' compute);
+    * ``name``   — deterministic lexicographic order;
+    * ``load``   — cheapest per-request decode cost first.
+    """
+    envs = menv.envs
+    if order == "weight":
+        return sorted(envs, key=lambda m: envs[m].cost_model().weight_bytes())
+    if order == "name":
+        return sorted(envs)
+    if order == "load":
+        return sorted(envs, key=lambda m: envs[m].cost_model()
+                      .decode_flops(envs[m].s_max, [envs[m].s_max]))
+    raise ValueError(f"unknown model order {order!r} "
+                     "(expected weight|name|load)")
 
 
 def _kv_bytes(env: EdgeEnv, batch: Sequence[Request]) -> float:
@@ -61,20 +93,17 @@ def _kv_bytes(env: EdgeEnv, batch: Sequence[Request]) -> float:
         + cm.kv_bytes_decode([r.n for r in batch], env.s_max))
 
 
-def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request]
+def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
+                order: str = "weight"
                 ) -> Tuple[Dict[str, List[Request]], SearchStats]:
     """Joint schedule across hosted models on shared budgets."""
     stats = SearchStats()
     by_model: Dict[str, List[Request]] = {m: [] for m in menv.envs}
     for r in requests:
-        mid = getattr(r, "model_id", None)
-        if mid in by_model:
-            by_model[mid].append(r)
+        if r.model_id in by_model:
+            by_model[r.model_id].append(r)
 
-    # cheapest-expected-batch model first (its requests lose the least
-    # slack to queueing behind other models' compute)
-    order = sorted(menv.envs,
-                   key=lambda m: menv.envs[m].cost_model().weight_bytes())
+    visit = model_order(menv, order)
 
     mem_left = menv.M - menv.weight_bytes()
     if mem_left < 0:
@@ -83,7 +112,7 @@ def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request]
     t_queued = 0.0
     out: Dict[str, List[Request]] = {}
 
-    for mid in order:
+    for mid in visit:
         env = menv.envs[mid]
         pool = by_model[mid]
         # residual-budget view: memory = own weights + the shared
@@ -113,3 +142,43 @@ def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request]
             t_queued += problem.batch_compute_time(env, kept)
     stats.z_solved = sum(len(v) for v in out.values())
     return out, stats
+
+
+def multi_feasible(menv: MultiLLMEnv, batches: Dict[str, List[Request]],
+                   order: str = "weight") -> bool:
+    """Authoritative feasibility oracle for a joint multi-model schedule:
+    shared OFDMA spectrum, shared memory pool, and per-request deadlines
+    under the sequential single-compute-slot execution in ``order``."""
+    rho_u = rho_d = 0.0
+    mem = menv.weight_bytes()
+    for mid, batch in batches.items():
+        env = menv.envs.get(mid)
+        if env is None:
+            if batch:              # non-empty batch for an unhosted model
+                return False
+            continue
+        for r in batch:
+            if r.model_id != mid:
+                return False
+            if not problem.accuracy_feasible(env, r):
+                return False
+            rho_u += comm.rho_min_up(env, r)
+            rho_d += comm.rho_min_down(env, r)
+        if batch:
+            mem += _kv_bytes(env, batch)
+    if rho_u > 1.0 + 1e-9 or rho_d > 1.0 + 1e-9:
+        return False
+    if mem > menv.M + 1e-6:
+        return False
+    t_queued = 0.0
+    for mid in model_order(menv, order):
+        batch = batches.get(mid, [])
+        if not batch:
+            continue
+        env = menv.envs[mid]
+        t = problem.batch_compute_time(env, batch)
+        for r in batch:
+            if r.t_w + env.T_U + t_queued + t + env.T_D > r.tau + 1e-9:
+                return False
+        t_queued += t
+    return True

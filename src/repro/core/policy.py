@@ -1,0 +1,318 @@
+"""SchedulerPolicy: the pluggable control plane behind the epoch runtime.
+
+A policy is a class with two methods:
+
+    schedule(env, queue) -> Decision     pick this epoch's batch(es)
+    validate(env, decision) -> bool      the policy's own feasibility oracle
+
+carrying its own oracle is the point: the runtime re-checks every decision
+without knowing which problem variant the policy solves (P1 for batch
+schedulers, the per-unit NoB constraints, or the shared-budget joint
+problem for multi-LLM) — this replaces the old ``is_nob`` scheduler-name
+string matching in the simulation loop.
+
+``Decision`` holds one batch per hosted model (single-model policies use
+the ``None`` key), so ``multi_dftsp`` is a first-class policy instead of a
+signature outlier.
+
+Policies are registered by decorator and built from parameterized string
+specs::
+
+    get_policy("dftsp")                      # defaults
+    get_policy("dftsp:d_sweep=false")        # fast heuristic variant
+    get_policy("multi-dftsp:order=name")     # joint scheduler, name order
+
+``policy.spec`` reconstructs the canonical spec (registry round-trip:
+``get_policy(get_policy(s).spec).spec == s`` for canonical ``s``).
+"""
+from __future__ import annotations
+
+import inspect
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
+
+from repro.core import multi as _multi
+from repro.core import problem
+from repro.core import schedulers as _legacy
+from repro.core.dftsp import SearchStats, dftsp_schedule
+from repro.core.environment import EdgeEnv
+from repro.core.request import Request
+
+Env = Union[EdgeEnv, "_multi.MultiLLMEnv"]
+
+
+@dataclass
+class Decision:
+    """One epoch's scheduling outcome: per-model batches + search stats.
+
+    Single-model policies put their batch under the ``None`` key; the
+    multi-LLM policy keys batches by hosted ``model_id``.
+    """
+    batches: Dict[Optional[str], List[Request]]
+    stats: SearchStats = field(default_factory=SearchStats)
+
+    @classmethod
+    def single(cls, selected: Sequence[Request],
+               stats: Optional[SearchStats] = None) -> "Decision":
+        return cls(batches={None: list(selected)},
+                   stats=stats or SearchStats())
+
+    @property
+    def selected(self) -> List[Request]:
+        """All scheduled requests, flattened in model order."""
+        return [r for batch in self.batches.values() for r in batch]
+
+    @property
+    def size(self) -> int:
+        return sum(len(b) for b in self.batches.values())
+
+
+class SchedulerPolicy:
+    """Base class: one scheduling algorithm + its feasibility oracle."""
+
+    name: str = "?"
+
+    def schedule(self, env: Env, queue: Sequence[Request]) -> Decision:
+        raise NotImplementedError
+
+    def validate(self, env: Env, decision: Decision) -> bool:
+        """Default oracle: the full P1 constraint set on the flat batch."""
+        return problem.feasible(env, decision.selected)
+
+    @property
+    def spec(self) -> str:
+        """Canonical registry spec (non-default constructor params only)."""
+        parts = []
+        sig = inspect.signature(type(self).__init__)
+        for k, p in sig.parameters.items():
+            if k == "self" or p.default is inspect.Parameter.empty:
+                continue
+            v = getattr(self, k, p.default)
+            if v != p.default:
+                parts.append(f"{k}={_format_value(v)}")
+        return self.name + (":" + ",".join(sorted(parts)) if parts else "")
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.spec!r}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry: decorator + parameterized string specs
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[SchedulerPolicy]] = {}
+
+
+def register(name: str) -> Callable[[Type[SchedulerPolicy]],
+                                    Type[SchedulerPolicy]]:
+    """Class decorator: make a policy buildable via ``get_policy(name)``."""
+    def deco(cls: Type[SchedulerPolicy]) -> Type[SchedulerPolicy]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def _coerce_value(text: str):
+    low = text.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            pass
+    return text
+
+
+def _format_value(v) -> str:
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    return str(v)
+
+
+def parse_spec(spec: str) -> Tuple[str, Dict[str, object]]:
+    """``"name:key=val,key2=val2"`` -> (name, params).  Values are coerced
+    to bool/int/float when they parse as one."""
+    name, _, tail = spec.partition(":")
+    params: Dict[str, object] = {}
+    if tail:
+        for item in tail.split(","):
+            k, sep, v = item.partition("=")
+            if not sep:
+                raise ValueError(f"malformed policy spec {spec!r}: "
+                                 f"expected key=value, got {item!r}")
+            params[k.strip()] = _coerce_value(v.strip())
+    return name.strip(), params
+
+
+def get_policy(spec: Union[str, SchedulerPolicy]) -> SchedulerPolicy:
+    """Build a policy from a registry spec (idempotent on policy objects)."""
+    if isinstance(spec, SchedulerPolicy):
+        return spec
+    name, params = parse_spec(spec)
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise KeyError(f"unknown policy {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}")
+    try:
+        return cls(**params)
+    except TypeError as e:
+        raise TypeError(f"bad params for policy {name!r}: {e}") from e
+
+
+def available() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Single-model policies (wrapping the pure scheduling functions)
+# ---------------------------------------------------------------------------
+
+
+@register("dftsp")
+class DftspPolicy(SchedulerPolicy):
+    """Paper Algorithm 1 (optimal DFS tree search with online pruning)."""
+
+    def __init__(self, prune: bool = True, order_desc: bool = True,
+                 d_sweep: bool = True, fast_z_bound: bool = True):
+        self.prune = prune
+        self.order_desc = order_desc
+        self.d_sweep = d_sweep
+        self.fast_z_bound = fast_z_bound
+
+    def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
+        sel, stats = dftsp_schedule(env, queue, prune=self.prune,
+                                    order_desc=self.order_desc,
+                                    d_sweep=self.d_sweep,
+                                    fast_z_bound=self.fast_z_bound)
+        return Decision.single(sel, stats)
+
+
+@register("brute_force")
+class BruteForcePolicy(SchedulerPolicy):
+    """Un-pruned, un-ordered tree search (Table III benchmark)."""
+
+    def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
+        sel, stats = dftsp_schedule(env, queue, prune=False,
+                                    order_desc=False, fast_z_bound=False)
+        return Decision.single(sel, stats)
+
+
+@register("stb")
+class StaticBatchingPolicy(SchedulerPolicy):
+    """StB: FIFO admission up to the offline worst-case batch size."""
+
+    def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
+        sel, stats = _legacy.static_batching(env, queue)
+        return Decision.single(sel, stats)
+
+    def batch_size(self, env: EdgeEnv) -> int:
+        """The memoized offline batch size this policy admits up to."""
+        return _legacy.static_batch_size(env)
+
+
+@register("nob")
+class NoBatchingPolicy(SchedulerPolicy):
+    """NoB: one request per accelerator unit.  Its oracle is per-unit
+    (1/n_units of compute+memory, true prompt length), NOT batched P1."""
+
+    def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
+        sel, stats = _legacy.no_batching(env, queue)
+        return Decision.single(sel, stats)
+
+    def validate(self, env: EdgeEnv, decision: Decision) -> bool:
+        return _legacy.nob_feasible(env, decision.selected)
+
+
+@register("greedy")
+class GreedyPolicy(SchedulerPolicy):
+    """Slack-then-cost greedy admission (beyond-paper heuristic anchor)."""
+
+    def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
+        sel, stats = _legacy.greedy(env, queue)
+        return Decision.single(sel, stats)
+
+
+class CallablePolicy(SchedulerPolicy):
+    """Adapter for legacy ``(env, requests) -> (selected, stats)``
+    callables (e.g. the capped searchers in benchmarks/table3)."""
+
+    name = "callable"
+
+    def __init__(self, fn: _legacy.Scheduler,
+                 oracle: Optional[Callable[[EdgeEnv, Sequence[Request]],
+                                           bool]] = None):
+        self.fn = fn
+        self.oracle = oracle
+
+    def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
+        sel, stats = self.fn(env, queue)
+        return Decision.single(sel, stats)
+
+    def validate(self, env: EdgeEnv, decision: Decision) -> bool:
+        if self.oracle is not None:
+            return self.oracle(env, decision.selected)
+        return problem.feasible(env, decision.selected)
+
+    @property
+    def spec(self) -> str:
+        return f"callable:{getattr(self.fn, '__name__', repr(self.fn))}"
+
+
+# ---------------------------------------------------------------------------
+# Multi-LLM joint policy (first-class, same registry/runtime as the rest)
+# ---------------------------------------------------------------------------
+
+
+@register("multi-dftsp")
+class MultiDftspPolicy(SchedulerPolicy):
+    """Joint DFTSP over a MultiLLMEnv's hosted models (residual budgets,
+    sequential compute slot).  ``order`` picks the model visit order."""
+
+    def __init__(self, order: str = "weight"):
+        if order not in ("weight", "name", "load"):
+            raise ValueError(f"unknown model order {order!r} "
+                             "(expected weight|name|load)")
+        self.order = order
+
+    def schedule(self, menv: "_multi.MultiLLMEnv",
+                 queue: Sequence[Request]) -> Decision:
+        batches, stats = _multi.multi_dftsp(menv, queue, order=self.order)
+        return Decision(batches=dict(batches), stats=stats)
+
+    def validate(self, menv: "_multi.MultiLLMEnv",
+                 decision: Decision) -> bool:
+        return _multi.multi_feasible(menv, decision.batches,
+                                     order=self.order)
+
+
+# ---------------------------------------------------------------------------
+# Coercion from the legacy surface
+# ---------------------------------------------------------------------------
+
+_LEGACY_FN_SPECS = {
+    _legacy.dftsp: "dftsp",
+    _legacy.brute_force: "brute_force",
+    _legacy.static_batching: "stb",
+    _legacy.no_batching: "nob",
+    _legacy.greedy: "greedy",
+}
+
+
+def as_policy(obj: Union[str, SchedulerPolicy, _legacy.Scheduler]
+              ) -> SchedulerPolicy:
+    """Coerce specs, policy objects, and legacy scheduler callables.
+
+    Known legacy functions map (by identity, not name) to their registered
+    policy class so e.g. ``no_batching`` keeps its per-unit oracle; unknown
+    callables get the default P1 oracle via ``CallablePolicy``.
+    """
+    if isinstance(obj, SchedulerPolicy):
+        return obj
+    if isinstance(obj, str):
+        return get_policy(obj)
+    if callable(obj):
+        known = _LEGACY_FN_SPECS.get(obj)
+        return get_policy(known) if known else CallablePolicy(obj)
+    raise TypeError(f"cannot build a SchedulerPolicy from {obj!r}")

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
@@ -19,6 +20,8 @@ class Request:
     h: float               # channel gain (amplitude)
     arrival: float = 0.0   # arrival time (seconds)
     t_w: float = 0.0       # waiting time at scheduling (seconds)
+    model_id: Optional[str] = None   # hosted model this request targets
+                                     # (None on a single-LLM node)
 
 
 @dataclass

@@ -61,11 +61,31 @@ def exhaustive(env: EdgeEnv, requests: Sequence[Request],
     return best, stats
 
 
+def _static_batch_key(env: EdgeEnv) -> tuple:
+    """Cache key over exactly the EdgeEnv fields the derivation reads.
+    (EdgeEnv itself is unhashable: QuantMethod carries a dPPL dict.)"""
+    q = env.quant
+    return (env.model, q.name, q.weight_bits, q.act_bits, q.beta,
+            env.C, env.M, env.T_E, env.T_U, env.T_D, env.s_max,
+            env.paper_faithful)
+
+
+_STATIC_BATCH_CACHE: Dict[tuple, int] = {}
+
+
 def static_batch_size(env: EdgeEnv) -> int:
     """StB's offline batch size: largest B such that a batch of B
     *worst-case* requests (max output level, median channel) is feasible on
     memory and the epoch compute budget (paper §IV: 'set batch size based on
-    epoch duration and LLM parameters to avoid GPU overflow')."""
+    epoch duration and LLM parameters to avoid GPU overflow').
+
+    Memoized: the result is a pure function of the frozen EdgeEnv, so the
+    O(B_max) re-derivation runs once per environment, not once per epoch.
+    """
+    key = _static_batch_key(env)
+    cached = _STATIC_BATCH_CACHE.get(key)
+    if cached is not None:
+        return cached
     cm = env.cost_model()
     q = env.quant
     n_max = env.s_max                      # worst-case output level
@@ -82,6 +102,7 @@ def static_batch_size(env: EdgeEnv) -> int:
         B = b
         if B >= 4096:                      # safety rail
             break
+    _STATIC_BATCH_CACHE[key] = B
     return B
 
 

@@ -106,7 +106,7 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         functools.partial(_decode_kernel, n_s=n_s, block_s=block_s),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, nkv, G, dh), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(nv, qg, k, v)

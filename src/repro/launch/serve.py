@@ -14,8 +14,9 @@ import argparse
 
 from repro.config import get_arch
 from repro.core.environment import paper_env, tpu_env
+from repro.core.policy import get_policy
 from repro.serving.engine import ServingEngine
-from repro.serving.simulator import serve_epochs
+from repro.serving.runtime import EngineExecutor, EpochRuntime
 
 REDUCED = dict(n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
                d_ff=512, vocab=2048)
@@ -27,7 +28,8 @@ def main(argv=None):
     ap.add_argument("--epochs", type=int, default=5)
     ap.add_argument("--rate", type=float, default=10.0)
     ap.add_argument("--scheduler", default="dftsp",
-                    choices=["dftsp", "stb", "nob", "greedy", "brute_force"])
+                    help="policy registry spec, e.g. dftsp, stb, "
+                         "dftsp:d_sweep=false")
     ap.add_argument("--quant", default="W8A16")
     ap.add_argument("--bits", type=int, default=8,
                     help="actual weight bits for the engine (0 = fp)")
@@ -50,11 +52,14 @@ def main(argv=None):
     engine = ServingEngine(cfg, batch_capacity=args.batch_capacity,
                            s_max=args.s_max, n_max=args.n_max,
                            quant_bits=args.bits)
-    trace = serve_epochs(env, engine, args.scheduler, args.rate,
-                         n_epochs=args.epochs)
+    runtime = EpochRuntime(env, get_policy(args.scheduler),
+                           EngineExecutor(engine))
+    trace = runtime.run(rate=args.rate, n_epochs=args.epochs,
+                        warmup_epochs=0)
     print(f"[serve] epochs={trace.epochs} served={trace.served} "
           f"tokens={trace.generated_tokens} "
-          f"throughput={trace.throughput:.2f} req/epoch "
+          f"truncated={trace.truncated} "
+          f"throughput={trace.throughput:.2f} req/s "
           f"batches={trace.batches}")
     return 0
 

@@ -1,3 +1,17 @@
-from repro.serving.engine import ServingEngine, GenerationResult
+"""Serving: the ServingEngine data plane + the shared EpochRuntime.
 
-__all__ = ["ServingEngine", "GenerationResult"]
+``ServingEngine`` / ``GenerationResult`` are lazily re-exported so that
+importing the (JAX-free) scheduling runtime does not pull in jax.
+"""
+from repro.serving.runtime import (AnalyticExecutor, EngineExecutor,  # noqa: F401
+                                   EpochRuntime, Executor)
+
+__all__ = ["ServingEngine", "GenerationResult", "EpochRuntime",
+           "Executor", "AnalyticExecutor", "EngineExecutor"]
+
+
+def __getattr__(name):
+    if name in ("ServingEngine", "GenerationResult"):
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -71,6 +71,16 @@ class ServingEngine:
 
     # -- public API ----------------------------------------------------------
 
+    def synth_prompts(self, requests: Sequence, rng: np.random.Generator):
+        """Synthesize random-token prompts + output caps for scheduled
+        requests, clamped to this engine's static shapes (the cost-model
+        lengths s_i/n_i may exceed a reduced engine's s_max/n_max)."""
+        prompts = [rng.integers(1, self.cfg.vocab,
+                                size=min(r.s, self.s_max)).tolist()
+                   for r in requests]
+        caps = [min(r.n, self.n_max) for r in requests]
+        return prompts, caps
+
     def pad_prompts(self, prompts: Sequence[Sequence[int]]) -> np.ndarray:
         """Left-truncate/right-pad prompts to (batch_capacity, s_max)."""
         B = self.batch_capacity

@@ -1,0 +1,219 @@
+"""EpochRuntime: THE epoch/queue lifecycle loop (paper Fig. 2 + §IV).
+
+Historically the protocol — arrivals join at the epoch boundary, queued
+requests age, hopeless requests drop, a scheduler picks a batch, served
+requests leave — was hand-rolled three times (analytic sim, real-engine
+serving, multi-LLM benchmarks) with drifting semantics.  It now lives
+here exactly once, parameterized on two axes:
+
+  * control plane — a ``SchedulerPolicy`` (core/policy.py): what to batch,
+    and the feasibility oracle the runtime re-checks it against;
+  * data plane — an ``Executor``: how a decision is carried out.
+    ``AnalyticExecutor`` charges cost-model time only (the paper's
+    figures); ``EngineExecutor`` runs each batch on real JAX models via
+    ``ServingEngine.generate``, clamping to engine capacity with a
+    feasibility re-check and spill accounting instead of the old silent
+    truncation.
+
+``core.epoch.simulate`` / ``serving.simulator.serve_epochs`` / ``sweep``
+remain as thin deprecation shims over this class; both report the unified
+``EpochMetrics`` (throughput in requests/second everywhere).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.environment import EdgeEnv
+from repro.core.metrics import EpochMetrics, EpochTrace
+from repro.core.multi import MultiLLMEnv
+from repro.core.policy import Decision, SchedulerPolicy, as_policy
+from repro.core.request import Request, RequestGenerator
+
+Env = Union[EdgeEnv, MultiLLMEnv]
+
+
+def still_viable(env: EdgeEnv, r: Request, now: float) -> bool:
+    """Could this queued request still meet its deadline if scheduled at the
+    *next* epoch boundary?  Lower bound: comm slots + its lone compute at
+    its true prompt length (<= any batched/padded execution)."""
+    t_w = now - r.arrival
+    cm = env.cost_model()
+    lone = env.quant.beta * (cm.prefill_flops(r.s, 1)
+                             + cm.decode_flops(r.s, [r.n])) / env.C
+    return t_w + env.T_U + lone + env.T_D <= r.tau + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Executors: the data plane behind a scheduling decision
+# ---------------------------------------------------------------------------
+
+
+class Executor:
+    """How a scheduling decision is carried out each epoch."""
+
+    def admit(self, env: Env, policy: SchedulerPolicy, decision: Decision
+              ) -> Tuple[Decision, List[Request]]:
+        """Clamp a decision to this data plane's capacity.  Returns the
+        (possibly reduced) decision plus the spilled requests, which stay
+        in the queue for later epochs."""
+        return decision, []
+
+    def execute(self, env: Env, decision: Decision) -> int:
+        """Run the decision; returns the number of generated tokens."""
+        raise NotImplementedError
+
+
+class AnalyticExecutor(Executor):
+    """Cost-model-time execution: nothing runs, latency/memory are charged
+    analytically (P1's constraints).  The paper's evaluation path."""
+
+    def execute(self, env: Env, decision: Decision) -> int:
+        return 0
+
+
+class EngineExecutor(Executor):
+    """Real data plane: each batch executes on a ``ServingEngine``
+    (batched prefill + decode on the JAX model).
+
+    ``engines`` is one engine (single-model node) or a dict keyed by
+    ``model_id`` mirroring a MultiLLMEnv's hosted deployments.  Batches
+    larger than an engine's static ``batch_capacity`` are clamped and the
+    spill is reported to the runtime (re-queued + counted) — the clamped
+    batch is re-validated against the policy's own oracle rather than
+    trusted silently.
+    """
+
+    def __init__(self, engines, rng: Optional[np.random.Generator] = None,
+                 seed: int = 0):
+        if not isinstance(engines, dict):
+            engines = {None: engines}
+        self.engines = engines
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+
+    def admit(self, env: Env, policy: SchedulerPolicy, decision: Decision
+              ) -> Tuple[Decision, List[Request]]:
+        spilled: List[Request] = []
+        batches = {}
+        for mid, batch in decision.batches.items():
+            cap = self.engines[mid].batch_capacity
+            batches[mid] = batch[:cap]
+            spilled.extend(batch[cap:])
+        if not spilled:
+            return decision, []
+        clamped = Decision(batches=batches, stats=decision.stats)
+        # Feasibility is monotone under request removal for every shipped
+        # policy, but the oracle is the contract — re-check, don't assume.
+        assert policy.validate(env, clamped), \
+            f"{policy.spec}: capacity-clamped batch failed its own oracle"
+        return clamped, spilled
+
+    def execute(self, env: Env, decision: Decision) -> int:
+        tokens = 0
+        for mid, batch in decision.batches.items():
+            if not batch:
+                continue
+            engine = self.engines[mid]
+            prompts, caps = engine.synth_prompts(batch, self.rng)
+            result = engine.generate(prompts, caps)
+            tokens += int(result.lengths.sum())
+        return tokens
+
+
+# ---------------------------------------------------------------------------
+# The one control loop
+# ---------------------------------------------------------------------------
+
+
+class EpochRuntime:
+    """Drives the epoch protocol for any (env, policy, executor) triple."""
+
+    def __init__(self, env: Env, policy: Union[str, SchedulerPolicy],
+                 executor: Optional[Executor] = None):
+        self.env = env
+        self.policy = as_policy(policy)
+        self.executor = executor or AnalyticExecutor()
+
+    @property
+    def T_E(self) -> float:
+        return self.env.T_E
+
+    def _env_for(self, r: Request) -> Optional[EdgeEnv]:
+        """The single-model constraint view serving this request."""
+        if isinstance(self.env, MultiLLMEnv):
+            return self.env.env_for(r)
+        return self.env
+
+    def run(self, rate: Optional[float] = None, n_epochs: int = 30,
+            seed: int = 0, gen: Optional[RequestGenerator] = None,
+            warmup_epochs: int = 1,
+            tag_arrivals: Optional[Callable[[List[Request]],
+                                            List[Request]]] = None
+            ) -> EpochMetrics:
+        """Run the epoch protocol with Poisson(rate) arrivals.
+
+        The first ``warmup_epochs`` epochs run but are excluded from the
+        aggregate metrics (queue fill-up transient).  ``tag_arrivals``
+        lets multi-LLM workloads assign each arrival a ``model_id``.
+        """
+        if gen is None:
+            if rate is None:
+                raise ValueError("provide either rate= or gen=")
+            gen = RequestGenerator(rate=rate, seed=seed,
+                                   lengths=(128, 256, 512))
+        T_E = self.T_E
+        m = EpochMetrics(n_epochs=n_epochs, T_E=T_E)
+        queue: List[Request] = []
+
+        for e in range(n_epochs + warmup_epochs):
+            t0 = e * T_E
+            counting = e >= warmup_epochs
+            # requests that arrived during the previous epoch join the queue
+            arrivals = gen.within(t0 - T_E, t0) if e else []
+            if tag_arrivals is not None:
+                arrivals = tag_arrivals(arrivals)
+            if counting:
+                m.arrived += len(arrivals)
+            queue.extend(arrivals)
+
+            # age the queue; drop hopeless (or untargeted) requests
+            viable: List[Request] = []
+            n_dropped = 0
+            for r in queue:
+                r.t_w = t0 - r.arrival
+                env_r = self._env_for(r)
+                if env_r is not None and still_viable(env_r, r, t0):
+                    viable.append(r)
+                else:
+                    n_dropped += 1
+                    if counting:
+                        m.dropped += 1
+            queue = viable
+
+            decision = self.policy.schedule(self.env, queue)
+            decision, spilled = self.executor.admit(self.env, self.policy,
+                                                    decision)
+            # authoritative re-check against the policy's own oracle
+            # (schedulers must not cheat)
+            assert self.policy.validate(self.env, decision), \
+                f"{self.policy.spec} returned an infeasible batch"
+            tokens = self.executor.execute(self.env, decision)
+
+            sel = decision.selected
+            if counting:
+                m.served += len(sel)
+                m.batch_sizes.append(len(sel))
+                m.nodes_visited += decision.stats.nodes_visited
+                m.leaves_checked += decision.stats.leaves_checked
+                m.truncated += len(spilled)
+                m.generated_tokens += tokens
+            m.traces.append(EpochTrace(
+                epoch=e, arrived=len(arrivals), dropped=n_dropped,
+                selected_rids=[r.rid for r in sel], truncated=len(spilled),
+                nodes_visited=decision.stats.nodes_visited,
+                generated_tokens=tokens, counted=counting))
+
+            chosen = {r.rid for r in sel}
+            queue = [r for r in queue if r.rid not in chosen]
+        return m

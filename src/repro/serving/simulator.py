@@ -1,69 +1,40 @@
-"""End-to-end serving: DFTSP control plane driving the JAX data plane.
+"""End-to-end serving — deprecation shim over the unified runtime.
 
-``serve_epochs`` runs the paper's epoch protocol where each scheduled
-batch is *actually executed* on a (reduced) JAX model by the
-ServingEngine — the bridge between the analytic evaluation (core/epoch.py)
-and the runtime.  Used by examples/ and integration tests; the paper's
-figures come from the analytic ``core.epoch.simulate`` (long horizons).
+``serve_epochs`` pairs a ``SchedulerPolicy`` with the ``EngineExecutor``
+so every scheduled batch actually executes on the JAX model.  The loop
+itself (arrivals, aging, viability drops, selection, removal) lives in
+``repro.serving.runtime.EpochRuntime`` — the same loop the analytic
+``core.epoch.simulate`` shim drives.
+
+``ServeTrace`` is a deprecated alias of the unified ``EpochMetrics``:
+``throughput`` is requests/second (it used to divide by epoch *count*),
+and batches exceeding the engine's capacity are clamped with a
+feasibility re-check and counted in ``metrics.truncated`` instead of
+being silently cut.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Optional, Union
 
 import numpy as np
 
-from repro.core import problem
 from repro.core.environment import EdgeEnv
-from repro.core.epoch import _still_viable
-from repro.core.request import Request, RequestGenerator
-from repro.core.schedulers import get_scheduler
+from repro.core.metrics import EpochMetrics
+from repro.core.policy import SchedulerPolicy
 from repro.serving.engine import ServingEngine
+from repro.serving.runtime import EngineExecutor, EpochRuntime
+
+# Deprecated alias (pre-redesign name).
+ServeTrace = EpochMetrics
 
 
-@dataclass
-class ServeTrace:
-    epochs: int = 0
-    served: int = 0
-    generated_tokens: int = 0
-    batches: List[int] = field(default_factory=list)
-
-    @property
-    def throughput(self) -> float:
-        return self.served / max(self.epochs, 1)
-
-
-def serve_epochs(env: EdgeEnv, engine: ServingEngine, scheduler: str,
+def serve_epochs(env: EdgeEnv, engine: ServingEngine,
+                 scheduler: Union[str, SchedulerPolicy],
                  rate: float, n_epochs: int = 3, seed: int = 0,
-                 rng: Optional[np.random.Generator] = None) -> ServeTrace:
-    """Run ``n_epochs`` of schedule -> execute on the real model."""
-    sched = get_scheduler(scheduler)
-    gen = RequestGenerator(rate=rate, seed=seed)
-    rng = rng or np.random.default_rng(seed)
-    trace = ServeTrace()
-    queue: List[Request] = []
-
-    for e in range(n_epochs):
-        t0 = e * env.T_E
-        queue.extend(gen.within(t0 - env.T_E, t0) if e else [])
-        for r in queue:
-            r.t_w = t0 - r.arrival
-        queue = [r for r in queue if _still_viable(env, r, t0)]
-
-        sel, _ = sched(env, queue)
-        sel = sel[:engine.batch_capacity]
-        if sel:
-            prompts = [rng.integers(1, engine.cfg.vocab,
-                                    size=min(r.s, engine.s_max)).tolist()
-                       for r in sel]
-            caps = [min(r.n, engine.n_max) for r in sel]
-            result = engine.generate(prompts, caps)
-            trace.served += result.batch
-            trace.generated_tokens += int(result.lengths.sum())
-            trace.batches.append(result.batch)
-        else:
-            trace.batches.append(0)
-        chosen = {r.rid for r in sel}
-        queue = [r for r in queue if r.rid not in chosen]
-        trace.epochs += 1
-    return trace
+                 rng: Optional[np.random.Generator] = None) -> EpochMetrics:
+    """Deprecated shim: ``n_epochs`` of schedule -> execute on the real
+    model.  Delegates to ``EpochRuntime`` + ``EngineExecutor``."""
+    executor = EngineExecutor(engine, rng=rng, seed=seed)
+    runtime = EpochRuntime(env, scheduler, executor)
+    return runtime.run(rate=rate, n_epochs=n_epochs, seed=seed,
+                       warmup_epochs=0)

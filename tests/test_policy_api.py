@@ -1,0 +1,254 @@
+"""SchedulerPolicy / Executor / EpochRuntime API (the unified runtime).
+
+Covers: registry round-trip (spec -> policy -> spec), validate() parity
+with the historical ``nob_feasible`` / ``problem.feasible`` oracles on
+randomized batches, the memoized StB batch size, the Request.model_id
+field, capacity clamping with drop accounting, and an AnalyticExecutor vs
+EngineExecutor smoke test showing identical scheduling decisions for the
+same seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import pytest
+
+from conftest import reduced_cfg
+from repro.core import problem, schedulers
+from repro.core.environment import paper_env
+from repro.core.epoch import SimResult, simulate
+from repro.core.metrics import EpochMetrics
+from repro.core.multi import MultiLLMEnv, multi_feasible, tag
+from repro.core.policy import (CallablePolicy, Decision, SchedulerPolicy,
+                               as_policy, available, get_policy)
+from repro.core.request import Request, RequestGenerator
+from repro.serving.runtime import (AnalyticExecutor, EngineExecutor,
+                                   EpochRuntime)
+
+ENV = paper_env("bloom-3b", "W8A16")
+
+CANONICAL_SPECS = [
+    "dftsp", "stb", "nob", "greedy", "brute_force", "multi-dftsp",
+    "dftsp:d_sweep=false", "dftsp:fast_z_bound=false,prune=false",
+    "multi-dftsp:order=name",
+]
+
+
+# -- registry ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", CANONICAL_SPECS)
+def test_registry_roundtrip(spec):
+    policy = get_policy(spec)
+    assert policy.spec == spec
+    assert get_policy(policy.spec).spec == spec
+
+
+def test_registry_lists_all_core_policies():
+    assert {"dftsp", "stb", "nob", "greedy", "brute_force",
+            "multi-dftsp"} <= set(available())
+
+
+def test_param_coercion():
+    p = get_policy("dftsp:prune=false,d_sweep=true")
+    assert p.prune is False and p.d_sweep is True
+    assert get_policy("multi-dftsp:order=load").order == "load"
+
+
+def test_unknown_policy_and_bad_params_raise():
+    with pytest.raises(KeyError):
+        get_policy("nonexistent")
+    with pytest.raises(TypeError):
+        get_policy("dftsp:bogus_param=1")
+    with pytest.raises(ValueError):
+        get_policy("multi-dftsp:order=bogus")
+
+
+def test_as_policy_coercions():
+    assert isinstance(as_policy("dftsp"), SchedulerPolicy)
+    p = as_policy(get_policy("stb"))
+    assert as_policy(p) is p
+    # known legacy callables map (by identity) to their registered class,
+    # keeping e.g. NoB's per-unit oracle
+    assert as_policy(schedulers.no_batching).spec == "nob"
+    assert as_policy(schedulers.dftsp).spec == "dftsp"
+    custom = as_policy(lambda env, reqs: ([], None))
+    assert isinstance(custom, CallablePolicy)
+
+
+# -- validate() parity with the historical oracles --------------------------
+
+
+def _random_batches(seed, n_batches=25):
+    gen = RequestGenerator(rate=40, seed=seed)
+    pool = gen.within(0, 2.0)
+    rng = random.Random(seed)
+    for _ in range(n_batches):
+        k = rng.randint(0, min(len(pool), 12))
+        yield rng.sample(pool, k)
+
+
+def test_validate_parity_with_p1_oracle():
+    policy = get_policy("dftsp")
+    for batch in _random_batches(seed=11):
+        decision = Decision.single(batch)
+        assert policy.validate(ENV, decision) == \
+            problem.feasible(ENV, batch)
+
+
+def test_validate_parity_with_nob_oracle():
+    policy = get_policy("nob")
+    for batch in _random_batches(seed=12):
+        decision = Decision.single(batch)
+        assert policy.validate(ENV, decision) == \
+            schedulers.nob_feasible(ENV, batch)
+
+
+def test_multi_policy_validate_matches_oracle():
+    menv = MultiLLMEnv.host({
+        "bloom-3b": paper_env("bloom-3b", "W8A16"),
+        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+    })
+    gen = RequestGenerator(rate=40, seed=3)
+    reqs = gen.within(0, 2.0)
+    half = len(reqs) // 2
+    pool = tag(reqs[:half], "bloom-3b") + tag(reqs[half:], "bloom-7b1")
+    policy = get_policy("multi-dftsp")
+    decision = policy.schedule(menv, pool)
+    assert decision.size == decision.stats.z_solved
+    assert policy.validate(menv, decision)
+    assert multi_feasible(menv, decision.batches)
+    # an overfull joint schedule must be rejected
+    bloated = Decision(batches={"bloom-3b": list(reqs)})
+    for r in reqs:
+        r.model_id = "bloom-3b"
+    assert not policy.validate(menv, bloated)
+    # an unhosted-model key must not short-circuit validation of the rest
+    bloated.batches = {"ghost": [], **bloated.batches}
+    assert not policy.validate(menv, bloated)
+    ghost_req = tag([reqs[0]], "ghost")
+    assert not multi_feasible(menv, {"ghost": ghost_req})
+
+
+def test_host_rejects_mismatched_epoch_grids():
+    with pytest.raises(ValueError):
+        MultiLLMEnv.host({
+            "bloom-3b": paper_env("bloom-3b", "W8A16", T_E=2.0),
+            "bloom-7b1": paper_env("bloom-7b1", "W8A16", T_E=1.0),
+        })
+
+
+# -- satellite: memoized StB batch size -------------------------------------
+
+
+def test_static_batch_size_memoized_and_surfaced():
+    schedulers._STATIC_BATCH_CACHE.clear()
+    B = schedulers.static_batch_size(ENV)
+    assert len(schedulers._STATIC_BATCH_CACHE) == 1
+    assert schedulers.static_batch_size(ENV) == B
+    assert len(schedulers._STATIC_BATCH_CACHE) == 1    # cache hit, no growth
+    assert get_policy("stb").batch_size(ENV) == B
+    # a different env derives (and caches) its own size
+    env2 = paper_env("bloom-7b1", "W8A16")
+    B2 = schedulers.static_batch_size(env2)
+    assert len(schedulers._STATIC_BATCH_CACHE) == 2
+    assert B2 <= B      # bigger model can never admit a larger worst case
+
+
+# -- satellite: Request.model_id is a real field ----------------------------
+
+
+def test_model_id_is_a_dataclass_field():
+    names = {f.name for f in dataclasses.fields(Request)}
+    assert "model_id" in names
+    r = Request(0, 128, 128, 1.0, 0.0, 0.05)
+    assert r.model_id is None
+    tag([r], "bloom-3b")            # thin compat wrapper
+    assert r.model_id == "bloom-3b"
+
+
+# -- runtime: shims, metrics units, decisions -------------------------------
+
+
+def test_simulate_shim_returns_unified_metrics():
+    res = simulate(ENV, "dftsp", rate=10, n_epochs=5, seed=7)
+    assert isinstance(res, EpochMetrics)
+    assert SimResult is EpochMetrics                     # deprecated alias
+    assert res.throughput == pytest.approx(
+        res.served / (5 * ENV.T_E))                      # requests/second
+    assert len(res.batch_sizes) == 5
+    assert len(res.traces) == 6                          # + warmup epoch
+    assert not res.traces[0].counted
+
+
+def test_runtime_equals_simulate_shim():
+    policy = get_policy("dftsp")
+    a = simulate(ENV, "dftsp", rate=10, n_epochs=5, seed=7)
+    b = EpochRuntime(ENV, policy, AnalyticExecutor()).run(
+        rate=10, n_epochs=5, seed=7)
+    assert (a.served, a.dropped, a.arrived, a.nodes_visited) == \
+        (b.served, b.dropped, b.arrived, b.nodes_visited)
+    assert [t.selected_rids for t in a.traces] == \
+        [t.selected_rids for t in b.traces]
+
+
+def test_multi_llm_through_runtime():
+    menv = MultiLLMEnv.host({
+        "bloom-3b": paper_env("bloom-3b", "W8A16"),
+        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+    })
+
+    def tagger(arrivals):
+        for i, r in enumerate(arrivals):
+            r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+        return arrivals
+
+    m = EpochRuntime(menv, "multi-dftsp", AnalyticExecutor()).run(
+        rate=40, n_epochs=4, seed=0, tag_arrivals=tagger)
+    assert m.served > 0
+    assert len(m.batch_sizes) == 4
+    assert m.served == sum(m.batch_sizes)
+
+
+def test_untargeted_requests_drop_on_multi_env():
+    menv = MultiLLMEnv.host({"bloom-3b": paper_env("bloom-3b", "W8A16")})
+    m = EpochRuntime(menv, "multi-dftsp", AnalyticExecutor()).run(
+        rate=10, n_epochs=3, seed=0)       # nobody tags => nothing viable
+    assert m.served == 0
+    assert m.dropped == m.arrived
+
+
+# -- executors: equivalence + capacity clamping (real JAX engine) -----------
+
+
+@pytest.fixture(scope="module")
+def small_engine_cfg():
+    return reduced_cfg("bloom-3b")
+
+
+def test_analytic_vs_engine_same_decisions(small_engine_cfg):
+    from repro.serving.engine import ServingEngine
+    policy = get_policy("dftsp")
+    analytic = EpochRuntime(ENV, policy, AnalyticExecutor()).run(
+        rate=2, n_epochs=3, seed=1, warmup_epochs=0)
+    engine = ServingEngine(small_engine_cfg, batch_capacity=16,
+                           s_max=16, n_max=4)
+    engined = EpochRuntime(ENV, policy, EngineExecutor(engine, seed=1)).run(
+        rate=2, n_epochs=3, seed=1, warmup_epochs=0)
+    assert [t.selected_rids for t in analytic.traces] == \
+        [t.selected_rids for t in engined.traces]
+    assert analytic.served == engined.served
+    assert engined.generated_tokens > 0
+    assert analytic.generated_tokens == 0
+
+
+def test_engine_capacity_clamp_counts_drops(small_engine_cfg):
+    from repro.serving.engine import ServingEngine
+    engine = ServingEngine(small_engine_cfg, batch_capacity=1,
+                           s_max=16, n_max=4)
+    m = EpochRuntime(ENV, "dftsp", EngineExecutor(engine, seed=0)).run(
+        rate=6, n_epochs=3, seed=0, warmup_epochs=0)
+    assert all(b <= 1 for b in m.batch_sizes)       # clamped to capacity
+    assert m.truncated > 0                          # spill is counted
+    assert m.served == sum(m.batch_sizes)
