@@ -20,6 +20,7 @@ def main(argv=None):
                             fig5b_throughput_vs_latency as f5b,
                             fig6a_quant_precision as f6a,
                             fig6b_quant_accuracy as f6b,
+                            fig6_adaptive as f6ad,
                             table3_pruning_complexity as t3,
                             multi_llm_throughput as ml,
                             roofline_report as rr)
@@ -30,6 +31,7 @@ def main(argv=None):
             ("fig5b", f5b, {"n_epochs": n}),
             ("fig6a", f6a, {"n_epochs": n}),
             ("fig6b", f6b, {"n_epochs": n}),
+            ("fig6_adaptive", f6ad, {"n_epochs": n}),
             ("table3", t3, {"n_epochs": max(4, n // 3)}),
             ("multi_llm", ml, {"n_epochs": max(6, n // 2)}),
             ("roofline", rr, {})):

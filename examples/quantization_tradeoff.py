@@ -1,62 +1,94 @@
-"""Quantization accuracy/throughput tradeoff on REAL models (deliverable b).
+"""Quantization as a scheduling decision: adaptive vs fixed methods.
 
-Measures — not assumes — the paper's alpha and dPPL on an actual JAX
-model: quantize the weights at W8/W4, measure memory ratio and perplexity
-differential on a held-out synthetic set, then show how the measured dPPL
-feeds the scheduler's accuracy constraint (1e).
+Part 1 measures — not assumes — the paper's alpha and dPPL on an actual
+JAX model: quantize the weights at W8/W4, measure the memory ratio and
+the perplexity differential on a held-out synthetic set, and feed the
+measured dPPL into the scheduler's accuracy constraint (1e).
+
+Part 2 is the point of the refactor: the SAME trade-off as a live control
+decision.  ``dftsp:quant=auto`` picks the throughput-optimal admissible
+method per epoch, and on a mixed accuracy-requirement workload beats
+every fixed deployment from METHODS.
 
   PYTHONPATH=src python examples/quantization_tradeoff.py
 """
 from __future__ import annotations
 
-import math
-
-import jax
-
 from repro.config import get_arch
 from repro.core.environment import paper_env
-from repro.core.epoch import simulate
-from repro.core.quantization import QuantMethod, f_accuracy
-from repro.models.api import build_model
-from repro.quant.calibration import calibrate
+from repro.core.policy import get_policy
+from repro.core.quantization import METHODS, QuantMethod, f_accuracy
+from repro.core.request import RequestGenerator
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 
-def main():
+def simulate(env, spec, rate=50, n_epochs=10, seed=0, acc_range=(0.0, 1.0)):
+    gen = RequestGenerator(rate=rate, seed=seed, acc_range=acc_range)
+    return EpochRuntime(env, get_policy(spec), AnalyticExecutor()).run(
+        n_epochs=n_epochs, seed=seed, gen=gen)
+
+
+def measured_methods():
+    """Calibrate alpha/dPPL on a reduced bloom-3b (paper §II-B.3, live)."""
+    from repro.models.api import build_model
+    from repro.quant.calibration import calibrate
+    from repro.train import Trainer
+    import jax.numpy as jnp
+
     cfg = get_arch("bloom-3b").scaled(n_layers=4, d_model=256, n_heads=8,
                                       n_kv_heads=8, d_ff=1024, vocab=2048)
-    model = build_model(cfg)
+    build_model(cfg)
     print(f"[calibrate] reduced bloom-3b: {cfg.param_count() / 1e6:.1f}M "
           f"params — pre-training briefly so PPL (and dPPL) are "
           f"meaningful\n")
-    from repro.train import Trainer
-    import jax.numpy as jnp
     tr = Trainer(cfg, batch=16, seq=64)
     state, _ = tr.run(150, log_every=50, log=lambda s: None)
     params = state.params
     # held-out batch from the SAME corpus the model was trained on
     eval_batch = {k: jnp.asarray(v) for k, v in tr.data.next_batch().items()}
 
-    records = {}
+    out = []
     for bits in (8, 4):
         rec = calibrate(cfg, params, bits=bits, batch=eval_batch)
-        records[bits] = rec
         print(f"W{bits}: measured alpha_w={rec['alpha_w']:.3f} "
               f"(paper predicts {bits / 16:.3f}), "
               f"PPL {rec['ppl_fp']:.1f} -> {rec['ppl_quant']:.1f} "
               f"(dPPL={rec['dppl']:+.3f})")
+        dppl = max(rec["dppl"], 0.0)
+        out.append(QuantMethod(f"W{bits}-measured", bits, 16,
+                               beta=0.85 if bits == 8 else 0.8,
+                               dppl_default=dppl))
+    return out
 
-    # feed the MEASURED dPPL into the scheduler's accuracy model
-    print("\nscheduler impact (accuracy constraint 1e, f = exp(-dPPL)):")
-    for bits in (8, 4):
-        dppl = max(records[bits]["dppl"], 0.0)
-        f = f_accuracy(dppl)
-        method = QuantMethod(f"W{bits}-measured", bits, 16,
-                             beta=0.85 if bits == 8 else 0.8,
-                             dppl_default=dppl)
+
+def main():
+    # -- Part 1: measure the trade-off on a real model -----------------------
+    for method in measured_methods():
+        f = f_accuracy(method.dppl_default)
         env = paper_env("bloom-3b").with_(quant=method)
-        res = simulate(env, "dftsp", rate=50, n_epochs=10, seed=0)
-        print(f"  W{bits}: f(dPPL)={f:.3f} -> serves users with a<= that; "
-              f"throughput {res.throughput:.2f} req/s")
+        res = simulate(env, "dftsp")
+        print(f"  {method.name}: f(dPPL)={f:.3f} -> serves users with "
+              f"a<= that; throughput {res.throughput:.2f} req/s")
+
+    # -- Part 2: the trade-off as a per-epoch scheduling decision ------------
+    print("\nadaptive method selection (dftsp:quant=auto) vs every fixed "
+          "deployment,\nmixed accuracy demands a ~ U(0,1), rate 50 req/s:")
+    env = paper_env("bloom-3b")
+    rows = []
+    for name in METHODS:
+        res = simulate(env, f"dftsp:quant={name}")
+        rows.append((name, res.throughput, ""))
+    auto = simulate(env, "dftsp:quant=auto")
+    mix = ", ".join(f"{k}:{v}" for k, v in
+                    sorted(auto.served_by_method.items()))
+    rows.append(("quant=auto", auto.throughput, f"served mix: {mix}"))
+    best_fixed = max(t for _, t, _ in rows[:-1])
+    for name, thr, note in rows:
+        mark = " <= auto" if name != "quant=auto" else ""
+        print(f"  {name:12s} {thr:6.2f} req/s{mark}  {note}")
+    print(f"\n[demo] auto {auto.throughput:.2f} req/s vs best fixed "
+          f"{best_fixed:.2f} req/s — the Fig. 6 frontier, live per epoch")
+    assert auto.throughput >= best_fixed - 1e-9
 
 
 if __name__ == "__main__":

@@ -37,6 +37,15 @@ within-level greedy then dominates S* on every constraint (same counts per
 level => same memory, <= uplink/downlink, >= min slack), so the count
 vector of S* yields a feasible leaf.  ``d_sweep=False`` (single search on
 the full pool) is a fast heuristic, not the paper algorithm.
+
+Quantization as a decision variable: every entry point takes an explicit
+``quant`` (``None`` = the env's deployed method, bit-identical to the
+historical behavior), and ``dftsp_schedule_auto`` adds an outer METHOD
+dimension to the z-descent — candidate methods are prefiltered by the
+queue's accuracy demands, Pareto-dominated methods dropped, and (z,
+method) pairs are visited batch-size-first so the first feasible hit is
+still the maximum-throughput schedule; ties at equal z resolve to the
+fastest (lowest beta) method.
 """
 from __future__ import annotations
 
@@ -45,6 +54,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import comm, problem
 from repro.core.environment import EdgeEnv
+from repro.core.quantization import QuantMethod, candidate_methods
 from repro.core.request import Request
 
 
@@ -76,12 +86,14 @@ def _annotate(env: EdgeEnv, reqs: Sequence[Request]) -> List[Request]:
 
 
 class _Ctx:
-    """Precomputed environment quantities for incremental checks."""
+    """Precomputed (environment, method) quantities for incremental
+    checks.  ``quant=None`` reads the env's deployed method."""
 
-    def __init__(self, env: EdgeEnv):
+    def __init__(self, env: EdgeEnv, quant: Optional[QuantMethod] = None):
         self.env = env
+        self.quant = quant or env.quant
         cm = env.cost_model()
-        q = env.quant
+        q = self.quant
         self.weight_mem = q.alpha_w * cm.weight_bytes()
         self.prefill_mem = q.alpha_a * cm.kv_bytes_prefill(env.s_max, 1)
         self.alpha_a = q.alpha_a
@@ -126,7 +138,7 @@ def _search(ctx: _Ctx, levels: List[int],
         if remaining == 0:
             stats.leaves_checked += 1
             cand = list(chosen)
-            if _check(env, cand):
+            if _check(env, cand, ctx.quant):
                 return cand
             return None
         if k == K:
@@ -154,21 +166,23 @@ def _search(ctx: _Ctx, levels: List[int],
     return dfs(0, z, 0.0, 0.0, 0.0, 0.0, float("inf"))
 
 
-def _check(env: EdgeEnv, cand: List[Request]) -> bool:
+def _check(env: EdgeEnv, cand: List[Request],
+           quant: Optional[QuantMethod] = None) -> bool:
     """Constraints (2b)-(2e) on a complete leaf (authoritative oracle)."""
     if sum(r.rho_u for r in cand) > 1.0 + 1e-12:
         return False
     if sum(r.rho_d for r in cand) > 1.0 + 1e-12:
         return False
-    if not problem.memory_feasible(env, cand):
+    if not problem.memory_feasible(env, cand, quant):
         return False
-    return problem.latency_feasible(env, cand)
+    return problem.latency_feasible(env, cand, quant=quant)
 
 
-def _z_upper_bound(env: EdgeEnv, pool: List[Request]) -> int:
+def _z_upper_bound(env: EdgeEnv, pool: List[Request],
+                   quant: Optional[QuantMethod] = None) -> int:
     """Cheap per-constraint bound on the max feasible batch size (sound:
     each constraint is evaluated with its own most-favorable requests)."""
-    ctx = _Ctx(env)
+    ctx = _Ctx(env, quant)
     n = len(pool)
     # bandwidth bounds
     z_u = _greedy_bound(sorted(r.rho_u for r in pool), 1.0)
@@ -206,34 +220,97 @@ def _greedy_bound(sorted_costs: List[float], budget: float) -> int:
     return z
 
 
+def _solve_z(ctx: _Ctx, coeff: problem.P2Coefficients,
+             pool: List[Request], z: int, stats: SearchStats,
+             prune: bool, order_desc: bool, d_sweep: bool
+             ) -> Optional[List[Request]]:
+    """Algorithm 1's inner body for one target batch size z (slack-ranked
+    d-sweep over candidate pools, then the pruned DFS)."""
+    ranked = sorted(pool, key=lambda r: coeff.tau_tilde(r, z),
+                    reverse=True)
+    d_values = range(z, len(pool) + 1) if d_sweep else [len(pool)]
+    for d in d_values:
+        F_d = ranked[:d]
+        levels, groups = _group_by_level(F_d)
+        hit = _search(ctx, levels, groups, z, stats, prune, order_desc)
+        if hit is not None:
+            return hit
+    return None
+
+
 def dftsp_schedule(env: EdgeEnv, requests: Sequence[Request],
                    prune: bool = True, order_desc: bool = True,
                    d_sweep: bool = True, fast_z_bound: bool = True,
-                   stats: Optional[SearchStats] = None
+                   stats: Optional[SearchStats] = None,
+                   quant: Optional[QuantMethod] = None
                    ) -> Tuple[List[Request], SearchStats]:
     """Run Algorithm 1.  Returns (optimal batch S, search stats).
 
     ``prune=False, order_desc=False, fast_z_bound=False`` is the
     brute-force benchmark of Table III (same solution, more nodes).
+    ``quant`` evaluates every constraint under an explicit method instead
+    of the env's deployed one.
     """
     stats = stats or SearchStats()
-    pool = problem.filter_accuracy(env, requests)
+    pool = problem.filter_accuracy(env, requests, quant)
     if not pool:
         return [], stats
     pool = _annotate(env, pool)
-    ctx = _Ctx(env)
-    coeff = problem.P2Coefficients(env)
+    ctx = _Ctx(env, quant)
+    coeff = problem.P2Coefficients(env, quant)
 
-    z_start = _z_upper_bound(env, pool) if fast_z_bound else len(pool)
+    z_start = _z_upper_bound(env, pool, quant) if fast_z_bound else len(pool)
     for z in range(z_start, 0, -1):
-        ranked = sorted(pool, key=lambda r: coeff.tau_tilde(r, z),
-                        reverse=True)
-        d_values = range(z, len(pool) + 1) if d_sweep else [len(pool)]
-        for d in d_values:
-            F_d = ranked[:d]
-            levels, groups = _group_by_level(F_d)
-            hit = _search(ctx, levels, groups, z, stats, prune, order_desc)
+        hit = _solve_z(ctx, coeff, pool, z, stats, prune, order_desc,
+                       d_sweep)
+        if hit is not None:
+            stats.z_solved = z
+            return hit, stats
+    return [], stats
+
+
+def dftsp_schedule_auto(env: EdgeEnv, requests: Sequence[Request],
+                        methods: Optional[Sequence[QuantMethod]] = None,
+                        prune: bool = True, order_desc: bool = True,
+                        d_sweep: bool = True, fast_z_bound: bool = True,
+                        stats: Optional[SearchStats] = None
+                        ) -> Tuple[List[Request], QuantMethod, SearchStats]:
+    """Algorithm 1 with the quantization method as an OUTER decision
+    dimension.  Returns (optimal batch S, chosen method, stats).
+
+    Candidate methods are prefiltered by the queue's accuracy demands and
+    Pareto-pruned (``quantization.candidate_methods``); the z-descent then
+    runs globally across the surviving methods — at each z, methods are
+    tried fastest-first, so the first feasible hit maximizes batch size
+    (the throughput objective) and breaks ties toward the lowest compute
+    time.  With an empty queue (or no admissible method) the env's
+    deployed method is returned unchanged.
+    """
+    stats = stats or SearchStats()
+    model = env.model.arch_id
+    cands = candidate_methods(model, accuracies=[r.a for r in requests],
+                              methods=methods)
+    entries = []          # (method, ctx, coeff, pool, z upper bound)
+    for m in cands:
+        pool = problem.filter_accuracy(env, requests, m)
+        if not pool:
+            continue
+        pool = _annotate(env, pool)
+        bound = _z_upper_bound(env, pool, m) if fast_z_bound else len(pool)
+        if bound < 1:
+            continue
+        entries.append((m, _Ctx(env, m), problem.P2Coefficients(env, m),
+                        pool, bound))
+    if not entries:
+        return [], env.quant, stats
+
+    for z in range(max(e[4] for e in entries), 0, -1):
+        for m, ctx, coeff, pool, bound in entries:
+            if bound < z:
+                continue
+            hit = _solve_z(ctx, coeff, pool, z, stats, prune, order_desc,
+                           d_sweep)
             if hit is not None:
                 stats.z_solved = z
-                return hit, stats
-    return [], stats
+                return hit, m, stats
+    return [], env.quant, stats

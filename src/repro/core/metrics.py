@@ -1,11 +1,10 @@
 """Unified epoch-protocol metrics (analytic sim AND real-engine serving).
 
-``EpochMetrics`` replaces the two historical records — ``SimResult``
-(core/epoch.py, analytic) and ``ServeTrace`` (serving/simulator.py, real
-engine) — which disagreed on units: SimResult reported requests/second
-while ServeTrace divided by epoch *count*.  Both names are kept as
-deprecated aliases of this class; ``throughput`` is requests/second
-everywhere (the paper's objective).
+``EpochMetrics`` replaced the two historical records — ``SimResult``
+(analytic) and ``ServeTrace`` (real engine) — which disagreed on units.
+``throughput`` is requests/second everywhere (the paper's objective).
+The deprecated shim modules (``core/epoch.py``, ``serving/simulator.py``)
+and their aliases are gone; drive ``EpochRuntime`` directly.
 
 Per-epoch accounting lives in ``traces`` so executor-equivalence tests can
 compare scheduling decisions epoch by epoch, not just aggregates.
@@ -13,12 +12,17 @@ compare scheduling decisions epoch by epoch, not just aggregates.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclass
 class EpochTrace:
-    """One epoch of the runtime loop (warmup epochs have counted=False)."""
+    """One epoch of the runtime loop (warmup epochs have counted=False).
+
+    ``quants`` records the quantization method the control plane decided
+    for each served model this epoch (``{model_id: method_name}``; the
+    ``None`` key on a single-model node) — empty when nothing was served.
+    """
     epoch: int
     arrived: int
     dropped: int
@@ -27,6 +31,7 @@ class EpochTrace:
     nodes_visited: int = 0
     generated_tokens: int = 0
     counted: bool = True
+    quants: Dict[Optional[str], str] = field(default_factory=dict)
 
 
 @dataclass
@@ -41,6 +46,7 @@ class EpochMetrics:
     batch_sizes: List[int] = field(default_factory=list)
     nodes_visited: int = 0
     leaves_checked: int = 0
+    served_by_method: Dict[str, int] = field(default_factory=dict)
     traces: List[EpochTrace] = field(default_factory=list)
 
     @property
@@ -53,6 +59,13 @@ class EpochMetrics:
     def mean_batch(self) -> float:
         bs = self.batch_sizes
         return sum(bs) / len(bs) if bs else 0.0
+
+    @property
+    def methods_served(self) -> List[str]:
+        """Distinct quantization methods that served requests, most-used
+        first (adaptive-precision runs list more than one)."""
+        return sorted(self.served_by_method,
+                      key=lambda k: (-self.served_by_method[k], k))
 
     # -- ServeTrace compatibility -------------------------------------------
 

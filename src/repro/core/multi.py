@@ -19,11 +19,12 @@ problem adds knapsack coupling across models; see EXPERIMENTS.md).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import comm, problem
-from repro.core.dftsp import SearchStats, dftsp_schedule
+from repro.core.dftsp import SearchStats, dftsp_schedule, dftsp_schedule_auto
 from repro.core.environment import EdgeEnv
+from repro.core.quantization import QuantMethod, get_method
 from repro.core.request import Request
 
 
@@ -86,17 +87,26 @@ def model_order(menv: MultiLLMEnv, order: str = "weight") -> List[str]:
                      "(expected weight|name|load)")
 
 
-def _kv_bytes(env: EdgeEnv, batch: Sequence[Request]) -> float:
+def _kv_bytes(env: EdgeEnv, batch: Sequence[Request],
+              quant: Optional[QuantMethod] = None) -> float:
     cm = env.cost_model()
-    return env.quant.alpha_a * (
+    q = quant or env.quant
+    return q.alpha_a * (
         cm.kv_bytes_prefill(env.s_max, len(batch))
         + cm.kv_bytes_decode([r.n for r in batch], env.s_max))
 
 
-def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
-                order: str = "weight"
-                ) -> Tuple[Dict[str, List[Request]], SearchStats]:
-    """Joint schedule across hosted models on shared budgets."""
+def multi_dftsp_assign(menv: MultiLLMEnv, requests: Sequence[Request],
+                       order: str = "weight", quant: str = "env"
+                       ) -> Tuple[Dict[str, List[Request]],
+                                  Dict[str, QuantMethod], SearchStats]:
+    """Joint schedule across hosted models on shared budgets, returning
+    the per-model quantization assignment alongside the batches.
+
+    ``quant`` is ``"env"`` (each model's deployed method — the historical
+    behavior), ``"auto"`` (per-model throughput-optimal method via
+    ``dftsp_schedule_auto``), or a METHODS name pinning every model.
+    """
     stats = SearchStats()
     by_model: Dict[str, List[Request]] = {m: [] for m in menv.envs}
     for r in requests:
@@ -105,9 +115,10 @@ def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
 
     visit = model_order(menv, order)
 
+    quants: Dict[str, QuantMethod] = {m: e.quant for m, e in menv.envs.items()}
     mem_left = menv.M - menv.weight_bytes()
     if mem_left < 0:
-        return {m: [] for m in menv.envs}, stats
+        return {m: [] for m in menv.envs}, quants, stats
     rho_u_left = rho_d_left = 1.0
     t_queued = 0.0
     out: Dict[str, List[Request]] = {}
@@ -119,10 +130,16 @@ def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
         # remainder (dftsp's (1c) re-subtracts the own-weight term), and
         # earlier models' batch compute delays this batch exactly like a
         # longer uplink slot (single compute queue, Fig. 2)
-        own_w = env.quant.alpha_w * env.cost_model().weight_bytes()
+        W = env.cost_model().weight_bytes()
+        own_w = env.quant.alpha_w * W
         res_env = env.with_(M=own_w + max(mem_left, 0.0),
                             T_U=env.T_U + t_queued)
-        sel, st = dftsp_schedule(res_env, pool)
+        if quant == "auto":
+            sel, q_m, st = dftsp_schedule_auto(res_env, pool)
+        else:
+            q_m = env.quant if quant == "env" else get_method(quant)
+            sel, st = dftsp_schedule(res_env, pool, quant=q_m)
+        quants[mid] = q_m
         stats.nodes_visited += st.nodes_visited
         stats.leaves_checked += st.leaves_checked
 
@@ -134,23 +151,47 @@ def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
                 kept.append(r)
                 rho_u_left -= ru
                 rho_d_left -= rd
-        while kept and not problem.latency_feasible(res_env, kept):
-            kept.pop()                 # drop the tightest-slack members
+        while kept and not problem.latency_feasible(res_env, kept,
+                                                    quant=q_m):
+            kept.pop()   # shed the costliest-uplink member until feasible
         out[mid] = kept
         if kept:
-            mem_left -= _kv_bytes(env, kept)
-            t_queued += problem.batch_compute_time(env, kept)
+            # KV under the decided method, plus the weight delta if the
+            # decision re-quantized this model's residency
+            mem_left -= (_kv_bytes(env, kept, q_m)
+                         + (q_m.alpha_w - env.quant.alpha_w) * W)
+            t_queued += problem.batch_compute_time(env, kept, quant=q_m)
+        else:
+            quants[mid] = env.quant     # nothing served: keep the default
     stats.z_solved = sum(len(v) for v in out.values())
-    return out, stats
+    return out, quants, stats
+
+
+def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
+                order: str = "weight"
+                ) -> Tuple[Dict[str, List[Request]], SearchStats]:
+    """Joint schedule across hosted models on shared budgets (fixed
+    deployed methods; see ``multi_dftsp_assign`` for method selection)."""
+    batches, _, stats = multi_dftsp_assign(menv, requests, order=order)
+    return batches, stats
 
 
 def multi_feasible(menv: MultiLLMEnv, batches: Dict[str, List[Request]],
-                   order: str = "weight") -> bool:
+                   order: str = "weight",
+                   quants: Optional[Dict[str, QuantMethod]] = None) -> bool:
     """Authoritative feasibility oracle for a joint multi-model schedule:
     shared OFDMA spectrum, shared memory pool, and per-request deadlines
-    under the sequential single-compute-slot execution in ``order``."""
+    under the sequential single-compute-slot execution in ``order``.
+    ``quants`` evaluates each model's constraints (weight residency, KV
+    factors, compute scale, accuracy) under its decided method."""
+    quants = quants or {}
+
+    def q_for(mid: str) -> QuantMethod:
+        return quants.get(mid) or menv.envs[mid].quant
+
     rho_u = rho_d = 0.0
-    mem = menv.weight_bytes()
+    mem = sum(q_for(m).alpha_w * e.cost_model().weight_bytes()
+              for m, e in menv.envs.items())
     for mid, batch in batches.items():
         env = menv.envs.get(mid)
         if env is None:
@@ -160,12 +201,12 @@ def multi_feasible(menv: MultiLLMEnv, batches: Dict[str, List[Request]],
         for r in batch:
             if r.model_id != mid:
                 return False
-            if not problem.accuracy_feasible(env, r):
+            if not problem.accuracy_feasible(env, r, q_for(mid)):
                 return False
             rho_u += comm.rho_min_up(env, r)
             rho_d += comm.rho_min_down(env, r)
         if batch:
-            mem += _kv_bytes(env, batch)
+            mem += _kv_bytes(env, batch, q_for(mid))
     if rho_u > 1.0 + 1e-9 or rho_d > 1.0 + 1e-9:
         return False
     if mem > menv.M + 1e-6:
@@ -176,7 +217,7 @@ def multi_feasible(menv: MultiLLMEnv, batches: Dict[str, List[Request]],
         if not batch:
             continue
         env = menv.envs[mid]
-        t = problem.batch_compute_time(env, batch)
+        t = problem.batch_compute_time(env, batch, quant=q_for(mid))
         for r in batch:
             if r.t_w + env.T_U + t_queued + t + env.T_D > r.tau + 1e-9:
                 return False

@@ -34,8 +34,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
 from repro.core import multi as _multi
 from repro.core import problem
 from repro.core import schedulers as _legacy
-from repro.core.dftsp import SearchStats, dftsp_schedule
+from repro.core.dftsp import SearchStats, dftsp_schedule, dftsp_schedule_auto
 from repro.core.environment import EdgeEnv
+from repro.core.quantization import METHODS, QuantMethod, get_method
 from repro.core.request import Request
 
 Env = Union[EdgeEnv, "_multi.MultiLLMEnv"]
@@ -43,19 +44,36 @@ Env = Union[EdgeEnv, "_multi.MultiLLMEnv"]
 
 @dataclass
 class Decision:
-    """One epoch's scheduling outcome: per-model batches + search stats.
+    """One epoch's scheduling outcome: per-model batches + per-model
+    quantization assignments + search stats.
 
     Single-model policies put their batch under the ``None`` key; the
-    multi-LLM policy keys batches by hosted ``model_id``.
+    multi-LLM policy keys batches by hosted ``model_id``.  ``quants``
+    records the method the control plane decided for each batch; a
+    missing key means "the env's deployed method" (so fixed-method
+    policies stay bit-identical to the pre-decision behavior).
     """
     batches: Dict[Optional[str], List[Request]]
     stats: SearchStats = field(default_factory=SearchStats)
+    quants: Dict[Optional[str], QuantMethod] = field(default_factory=dict)
 
     @classmethod
     def single(cls, selected: Sequence[Request],
-               stats: Optional[SearchStats] = None) -> "Decision":
+               stats: Optional[SearchStats] = None,
+               quant: Optional[QuantMethod] = None) -> "Decision":
         return cls(batches={None: list(selected)},
-                   stats=stats or SearchStats())
+                   stats=stats or SearchStats(),
+                   quants={} if quant is None else {None: quant})
+
+    def quant_for(self, model_id: Optional[str], env: Env) -> QuantMethod:
+        """The method this decision serves ``model_id`` with (falls back
+        to the deployment default frozen in the env)."""
+        q = self.quants.get(model_id)
+        if q is not None:
+            return q
+        if isinstance(env, _multi.MultiLLMEnv):
+            return env.envs[model_id].quant
+        return env.quant
 
     @property
     def selected(self) -> List[Request]:
@@ -76,8 +94,10 @@ class SchedulerPolicy:
         raise NotImplementedError
 
     def validate(self, env: Env, decision: Decision) -> bool:
-        """Default oracle: the full P1 constraint set on the flat batch."""
-        return problem.feasible(env, decision.selected)
+        """Default oracle: the full P1 constraint set on the flat batch,
+        evaluated under the decision's quant assignment (if any)."""
+        return problem.feasible(env, decision.selected,
+                                quant=decision.quants.get(None))
 
     @property
     def spec(self) -> str:
@@ -170,23 +190,48 @@ def available() -> List[str]:
 # ---------------------------------------------------------------------------
 
 
+def _resolve_quant_param(quant: str) -> Optional[QuantMethod]:
+    """``"env"`` -> None (deployed method), ``"auto"`` handled by callers,
+    else a METHODS name (e.g. ``"W4A16-GPTQ"``)."""
+    if quant == "env":
+        return None
+    if quant not in METHODS:
+        raise ValueError(f"unknown quant selector {quant!r} "
+                         f"(expected env|auto|{'|'.join(sorted(METHODS))})")
+    return get_method(quant)
+
+
 @register("dftsp")
 class DftspPolicy(SchedulerPolicy):
-    """Paper Algorithm 1 (optimal DFS tree search with online pruning)."""
+    """Paper Algorithm 1 (optimal DFS tree search with online pruning).
+
+    ``quant`` turns the Fig. 6 trade-off into a scheduling decision:
+    ``"env"`` (default) keeps the env's deployed method, a METHODS name
+    pins an explicit method, and ``"auto"`` selects the
+    throughput-optimal admissible method per epoch
+    (``dftsp_schedule_auto``).
+    """
 
     def __init__(self, prune: bool = True, order_desc: bool = True,
-                 d_sweep: bool = True, fast_z_bound: bool = True):
+                 d_sweep: bool = True, fast_z_bound: bool = True,
+                 quant: str = "env"):
         self.prune = prune
         self.order_desc = order_desc
         self.d_sweep = d_sweep
         self.fast_z_bound = fast_z_bound
+        self.quant = quant
+        if quant != "auto":
+            _resolve_quant_param(quant)     # fail fast on bad names
 
     def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
-        sel, stats = dftsp_schedule(env, queue, prune=self.prune,
-                                    order_desc=self.order_desc,
-                                    d_sweep=self.d_sweep,
-                                    fast_z_bound=self.fast_z_bound)
-        return Decision.single(sel, stats)
+        kw = dict(prune=self.prune, order_desc=self.order_desc,
+                  d_sweep=self.d_sweep, fast_z_bound=self.fast_z_bound)
+        if self.quant == "auto":
+            sel, method, stats = dftsp_schedule_auto(env, queue, **kw)
+            return Decision.single(sel, stats, quant=method)
+        q = _resolve_quant_param(self.quant)
+        sel, stats = dftsp_schedule(env, queue, quant=q, **kw)
+        return Decision.single(sel, stats, quant=q)
 
 
 @register("brute_force")
@@ -268,23 +313,32 @@ class CallablePolicy(SchedulerPolicy):
 @register("multi-dftsp")
 class MultiDftspPolicy(SchedulerPolicy):
     """Joint DFTSP over a MultiLLMEnv's hosted models (residual budgets,
-    sequential compute slot).  ``order`` picks the model visit order."""
+    sequential compute slot).  ``order`` picks the model visit order;
+    ``quant="auto"`` selects each hosted model's method per epoch."""
 
-    def __init__(self, order: str = "weight"):
+    def __init__(self, order: str = "weight", quant: str = "env"):
         if order not in ("weight", "name", "load"):
             raise ValueError(f"unknown model order {order!r} "
                              "(expected weight|name|load)")
         self.order = order
+        self.quant = quant
+        if quant != "auto":
+            _resolve_quant_param(quant)     # fail fast on bad names
 
     def schedule(self, menv: "_multi.MultiLLMEnv",
                  queue: Sequence[Request]) -> Decision:
-        batches, stats = _multi.multi_dftsp(menv, queue, order=self.order)
-        return Decision(batches=dict(batches), stats=stats)
+        batches, quants, stats = _multi.multi_dftsp_assign(
+            menv, queue, order=self.order, quant=self.quant)
+        if self.quant == "env":
+            quants = {}         # deployment defaults: record no override
+        return Decision(batches=dict(batches), stats=stats,
+                        quants=dict(quants))
 
     def validate(self, menv: "_multi.MultiLLMEnv",
                  decision: Decision) -> bool:
         return _multi.multi_feasible(menv, decision.batches,
-                                     order=self.order)
+                                     order=self.order,
+                                     quants=decision.quants)
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,12 @@ P1:  max |S|  s.t.
   (1c) alpha (m1 + m2_I + m2_A) <= M
   (1d) t_w,i + T_U + beta (t_I + t_A) + T_D <= tau_i   for all i in S
   (1e) a_i <= f(dPPL)
+
+Every oracle takes an explicit ``quant`` (the method the control plane
+decided for this batch); ``quant=None`` falls back to the environment's
+deployed method, which keeps fixed-method callers bit-identical.  This is
+what lets DFTSP treat the quantization method as a decision variable
+instead of a frozen deployment constant.
 """
 from __future__ import annotations
 
@@ -14,60 +20,70 @@ from typing import List, Optional, Sequence
 
 from repro.core import comm
 from repro.core.environment import EdgeEnv
-from repro.core.quantization import f_accuracy
+from repro.core.quantization import QuantMethod, f_accuracy
 from repro.core.request import Request
 
 
-def accuracy_feasible(env: EdgeEnv, r: Request) -> bool:
-    return r.a <= f_accuracy(env.quant.delta_ppl(env.model.arch_id)) + 1e-12
+def accuracy_feasible(env: EdgeEnv, r: Request,
+                      quant: Optional[QuantMethod] = None) -> bool:
+    q = quant or env.quant
+    return r.a <= f_accuracy(q.delta_ppl(env.model.arch_id)) + 1e-12
 
 
-def filter_accuracy(env: EdgeEnv, reqs: Sequence[Request]) -> List[Request]:
+def filter_accuracy(env: EdgeEnv, reqs: Sequence[Request],
+                    quant: Optional[QuantMethod] = None) -> List[Request]:
     """The paper's I-tilde: requests satisfied with the quantized model."""
-    return [r for r in reqs if accuracy_feasible(env, r)]
+    return [r for r in reqs if accuracy_feasible(env, r, quant)]
 
 
-def memory_used(env: EdgeEnv, reqs: Sequence[Request]) -> float:
+def memory_used(env: EdgeEnv, reqs: Sequence[Request],
+                quant: Optional[QuantMethod] = None) -> float:
     cm = env.cost_model()
-    q = env.quant
+    q = quant or env.quant
     m1 = cm.weight_bytes()
     m2i = cm.kv_bytes_prefill(env.s_max, len(reqs))
     m2a = cm.kv_bytes_decode([r.n for r in reqs], env.s_max)
     return q.alpha_w * m1 + q.alpha_a * (m2i + m2a)
 
 
-def memory_feasible(env: EdgeEnv, reqs: Sequence[Request]) -> bool:
-    return memory_used(env, reqs) <= env.M + 1e-6
+def memory_feasible(env: EdgeEnv, reqs: Sequence[Request],
+                    quant: Optional[QuantMethod] = None) -> bool:
+    return memory_used(env, reqs, quant) <= env.M + 1e-6
 
 
-def batch_compute_time(env: EdgeEnv, reqs: Sequence[Request]) -> float:
+def batch_compute_time(env: EdgeEnv, reqs: Sequence[Request],
+                       quant: Optional[QuantMethod] = None) -> float:
     """beta (t_I + t_A) for the whole batch (paper's aggregate-FLOPs model)."""
     cm = env.cost_model()
+    q = quant or env.quant
     t_i = cm.t_prefill(env.s_max, len(reqs), env.C)
     t_a = cm.t_decode(env.s_max, [r.n for r in reqs], env.C)
-    return env.quant.beta * (t_i + t_a)
+    return q.beta * (t_i + t_a)
 
 
 def latency_feasible(env: EdgeEnv, reqs: Sequence[Request],
-                     t_compute: Optional[float] = None) -> bool:
+                     t_compute: Optional[float] = None,
+                     quant: Optional[QuantMethod] = None) -> bool:
     """(1d): every scheduled request meets its deadline."""
     if not reqs:
         return True
     if t_compute is None:
-        t_compute = batch_compute_time(env, reqs)
+        t_compute = batch_compute_time(env, reqs, quant)
     slack = min(r.tau - r.t_w for r in reqs)
     return env.T_U + t_compute + env.T_D <= slack + 1e-12
 
 
 def feasible(env: EdgeEnv, reqs: Sequence[Request],
-             check_accuracy: bool = True) -> bool:
+             check_accuracy: bool = True,
+             quant: Optional[QuantMethod] = None) -> bool:
     """Full P1 feasibility of a candidate batch (constraints 1a-1e)."""
-    if check_accuracy and not all(accuracy_feasible(env, r) for r in reqs):
+    if check_accuracy and not all(accuracy_feasible(env, r, quant)
+                                  for r in reqs):
         return False
     return (comm.uplink_feasible(env, reqs)
             and comm.downlink_feasible(env, reqs)
-            and memory_feasible(env, reqs)
-            and latency_feasible(env, reqs))
+            and memory_feasible(env, reqs, quant)
+            and latency_feasible(env, reqs, quant=quant))
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +97,11 @@ class P2Coefficients:
     """tau_tilde_i = (tau_i - t_w,i - T_U - T_D) * C / beta - k3 * z ;
     M_tilde = k2 - s' z  (in KV-token units)."""
     env: EdgeEnv
+    quant: Optional[QuantMethod] = None
+
+    @property
+    def q(self) -> QuantMethod:
+        return self.quant or self.env.quant
 
     def tau_tilde(self, r: Request, z: int) -> float:
         """Latency slack in FLOP units, net of the per-request prefill cost
@@ -88,7 +109,7 @@ class P2Coefficients:
         env = self.env
         cm = env.cost_model()
         k3 = cm.prefill_flops(env.s_max, 1)
-        slack_flops = (r.tau - r.t_w - env.T_U - env.T_D) * env.C / env.quant.beta
+        slack_flops = (r.tau - r.t_w - env.T_U - env.T_D) * env.C / self.q.beta
         return slack_flops - k3 * z
 
     def decode_cost(self, r: Request) -> float:
@@ -99,7 +120,7 @@ class P2Coefficients:
         """M_tilde: KV-token capacity left after weights + z prefill caches."""
         env = self.env
         cm = env.cost_model()
-        q = env.quant
+        q = self.q
         per_tok = cm._kv_bytes_per_token() * q.alpha_a
         if per_tok <= 0:
             return float("inf")

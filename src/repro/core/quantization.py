@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Iterable, List, Optional, Sequence
 
 
 @dataclass(frozen=True)
@@ -70,3 +70,47 @@ METHODS: Dict[str, QuantMethod] = {
 
 def get_method(name: str) -> QuantMethod:
     return METHODS[name]
+
+
+# ---------------------------------------------------------------------------
+# Method selection (quantization as a scheduling decision)
+# ---------------------------------------------------------------------------
+
+
+def dominates(a: QuantMethod, b: QuantMethod, model: str) -> bool:
+    """``a`` dominates ``b`` iff it is no worse on every P1-relevant axis
+    (alpha_w, alpha_a, beta, dPPL) and strictly better on at least one.
+    Any batch feasible under ``b`` is then feasible under ``a`` (smaller
+    memory factors, faster compute, superset accuracy pool)."""
+    keys_a = (a.alpha_w, a.alpha_a, a.beta, a.delta_ppl(model))
+    keys_b = (b.alpha_w, b.alpha_a, b.beta, b.delta_ppl(model))
+    return all(x <= y for x, y in zip(keys_a, keys_b)) and keys_a != keys_b
+
+
+def pareto_methods(methods: Iterable[QuantMethod],
+                   model: str) -> List[QuantMethod]:
+    """Drop Pareto-dominated methods (dominated methods can never yield a
+    larger feasible batch, so pruning them preserves optimality)."""
+    pool = list(methods)
+    return [m for m in pool
+            if not any(dominates(o, m, model) for o in pool if o is not m)]
+
+
+def candidate_methods(model: str,
+                      accuracies: Optional[Sequence[float]] = None,
+                      methods: Optional[Iterable[QuantMethod]] = None
+                      ) -> List[QuantMethod]:
+    """Candidate set for per-epoch method selection over ``model``:
+    prefilter by the batch's accuracy requirements (keep a method only if
+    it can serve at least one requested ``a_i <= f(dPPL)``), then drop
+    Pareto-dominated methods.  Deterministic order: fastest first
+    (beta, then dPPL, alpha_w, name) so a first feasible hit at a given
+    batch size is also the preferred method."""
+    pool = list(methods) if methods is not None else list(METHODS.values())
+    if accuracies is not None:
+        pool = [m for m in pool
+                if any(a <= f_accuracy(m.delta_ppl(model)) + 1e-12
+                       for a in accuracies)]
+    pool = pareto_methods(pool, model)
+    return sorted(pool, key=lambda m: (m.beta, m.delta_ppl(model),
+                                       m.alpha_w, m.name))

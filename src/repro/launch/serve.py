@@ -30,9 +30,14 @@ def main(argv=None):
     ap.add_argument("--scheduler", default="dftsp",
                     help="policy registry spec, e.g. dftsp, stb, "
                          "dftsp:d_sweep=false")
-    ap.add_argument("--quant", default="W8A16")
+    ap.add_argument("--quant", default="W8A16",
+                    help="env's deployed method; pass "
+                         "--scheduler dftsp:quant=auto to let the "
+                         "control plane pick the method per epoch")
     ap.add_argument("--bits", type=int, default=8,
-                    help="actual weight bits for the engine (0 = fp)")
+                    help="engine's DEFAULT weight bits (0 = fp); "
+                         "per-epoch decisions override via the "
+                         "multi-precision weight cache")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--tpu-env", action="store_true",
                     help="use the v5e cost model instead of the paper's")
@@ -60,7 +65,8 @@ def main(argv=None):
           f"tokens={trace.generated_tokens} "
           f"truncated={trace.truncated} "
           f"throughput={trace.throughput:.2f} req/s "
-          f"batches={trace.batches}")
+          f"batches={trace.batches} "
+          f"methods={trace.served_by_method}")
     return 0
 
 

@@ -10,9 +10,14 @@ Static shapes: (batch_capacity, s') for prefill and a KV cache capacity of
 s' + n_max — one compiled executable serves every epoch (TPU-friendly, and
 why the paper's padded cost model maps 1:1 onto this engine).
 
-Weights can be served quantized: ``quant_bits`` runs ``quantize_tree`` so
-dense matmuls execute in the Pallas dequant-matmul kernel (transformer
-family; other families dequantize at load, see DESIGN.md §3).
+Weights can be served quantized: ``quant_bits`` picks the DEFAULT
+precision, and a per-call ``generate(..., quant_bits=...)`` override lets
+the scheduler serve each epoch at the method it decided.  Each requested
+bit-width is quantized once from the full-precision weights and kept in a
+small multi-precision cache (``params_for``), so swapping precision per
+epoch costs a dict lookup — dense matmuls execute in the Pallas
+dequant-matmul kernel (transformer family; other families dequantize at
+load, see DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -51,15 +56,36 @@ class ServingEngine:
         self.eos_id = eos_id
         if params is None:
             params = self.model.init(jax.random.key(seed))
-        if quant_bits:
-            params = quantize_tree(params, quant_bits)
-            if cfg.family not in ("dense", "moe", "vlm"):
-                # families whose matmuls don't route through common.mm yet
-                params = dequantize_tree(params)
-        self.params = params
+        self._raw_params = params            # full precision master copy
+        self._params_cache: dict = {}        # weight_bits -> param tree
+        self.default_bits = self._canon_bits(quant_bits)
+        self.params = self.params_for(quant_bits)
+        self.precisions_served: set = set()  # bit-widths generate() ran at
         self.cache_len = s_max + n_max
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn)
+
+    # -- multi-precision weight cache ---------------------------------------
+
+    @staticmethod
+    def _canon_bits(bits: Optional[int]) -> int:
+        """0 and 16 both mean full precision (no quantized tree)."""
+        return 0 if not bits or bits >= 16 else int(bits)
+
+    def params_for(self, bits: Optional[int]):
+        """Weights at ``bits`` precision, quantized once and cached so the
+        scheduler can swap the served method every epoch."""
+        bits = self._canon_bits(bits)
+        if bits not in self._params_cache:
+            if bits == 0:
+                p = self._raw_params
+            else:
+                p = quantize_tree(self._raw_params, bits)
+                if self.cfg.family not in ("dense", "moe", "vlm"):
+                    # families whose matmuls don't route through common.mm
+                    p = dequantize_tree(p)
+            self._params_cache[bits] = p
+        return self._params_cache[bits]
 
     # -- compiled step functions --------------------------------------------
 
@@ -92,8 +118,16 @@ class ServingEngine:
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  n_tokens: Optional[Sequence[int]] = None,
-                 greedy: bool = True) -> GenerationResult:
-        """Prefill + decode a batch.  n_tokens caps each request's output."""
+                 greedy: bool = True,
+                 quant_bits: Optional[int] = None) -> GenerationResult:
+        """Prefill + decode a batch.  n_tokens caps each request's output.
+        ``quant_bits`` serves this batch at an explicit weight precision
+        (via the multi-precision cache); ``None`` uses the engine
+        default."""
+        bits = self.default_bits if quant_bits is None \
+            else self._canon_bits(quant_bits)
+        params = self.params_for(bits)
+        self.precisions_served.add(bits)
         B = self.batch_capacity
         nb = len(prompts)
         assert nb <= B, (nb, B)
@@ -112,7 +146,7 @@ class ServingEngine:
             batch["audio_embeds"] = jnp.zeros(
                 (B, self.cfg.encdec.n_audio_frames, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
-        logits, cache = self._prefill(self.params, batch)
+        logits, cache = self._prefill(params, batch)
 
         caps_j = jnp.asarray(caps)
         out = np.zeros((B, self.n_max), np.int32)
@@ -130,7 +164,7 @@ class ServingEngine:
             done |= (cur == self.eos_id) & alive
             step_tok = jnp.asarray(cur)[:, None]
             pos = jnp.int32(self.s_max + t)
-            logits, cache = self._decode(self.params, cache, step_tok, pos)
+            logits, cache = self._decode(params, cache, step_tok, pos)
             cur = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1),
                              np.int32)
         return GenerationResult(tokens=out[:nb], lengths=lengths[:nb],

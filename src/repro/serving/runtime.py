@@ -7,17 +7,21 @@ serving, multi-LLM benchmarks) with drifting semantics.  It now lives
 here exactly once, parameterized on two axes:
 
   * control plane — a ``SchedulerPolicy`` (core/policy.py): what to batch,
-    and the feasibility oracle the runtime re-checks it against;
+    WITH WHICH QUANTIZATION METHOD (``Decision.quants``), and the
+    feasibility oracle the runtime re-checks it against;
   * data plane — an ``Executor``: how a decision is carried out.
     ``AnalyticExecutor`` charges cost-model time only (the paper's
     figures); ``EngineExecutor`` runs each batch on real JAX models via
-    ``ServingEngine.generate``, clamping to engine capacity with a
-    feasibility re-check and spill accounting instead of the old silent
-    truncation.
+    ``ServingEngine.generate`` — at the decision's precision, through the
+    engine's multi-precision weight cache — clamping to engine capacity
+    with a feasibility re-check and spill accounting instead of the old
+    silent truncation.
 
-``core.epoch.simulate`` / ``serving.simulator.serve_epochs`` / ``sweep``
-remain as thin deprecation shims over this class; both report the unified
-``EpochMetrics`` (throughput in requests/second everywhere).
+The epoch loop records each epoch's decided method per model in its
+``EpochTrace.quants`` and aggregates ``EpochMetrics.served_by_method``,
+so adaptive-precision runs are auditable epoch by epoch.  (The historical
+``simulate`` / ``serve_epochs`` / ``sweep`` shims are gone; drive this
+class directly.)
 """
 from __future__ import annotations
 
@@ -37,7 +41,12 @@ Env = Union[EdgeEnv, MultiLLMEnv]
 def still_viable(env: EdgeEnv, r: Request, now: float) -> bool:
     """Could this queued request still meet its deadline if scheduled at the
     *next* epoch boundary?  Lower bound: comm slots + its lone compute at
-    its true prompt length (<= any batched/padded execution)."""
+    its true prompt length (<= any batched/padded execution).
+
+    The bound is computed under the env's deployed method even when a
+    policy selects quant per epoch — it is a drop heuristic, and keeping
+    it method-independent keeps fixed- and adaptive-method runs on the
+    same queue trajectory for like-for-like comparison."""
     t_w = now - r.arrival
     cm = env.cost_model()
     lone = env.quant.beta * (cm.prefill_flops(r.s, 1)
@@ -83,6 +92,11 @@ class EngineExecutor(Executor):
     spill is reported to the runtime (re-queued + counted) — the clamped
     batch is re-validated against the policy's own oracle rather than
     trusted silently.
+
+    When a decision carries a quant assignment, each batch executes at
+    that method's weight precision via the engine's multi-precision
+    weight cache (``ServingEngine.params_for``) — the decided precision
+    actually reaches the Pallas dequant-matmul kernel.
     """
 
     def __init__(self, engines, rng: Optional[np.random.Generator] = None,
@@ -102,7 +116,8 @@ class EngineExecutor(Executor):
             spilled.extend(batch[cap:])
         if not spilled:
             return decision, []
-        clamped = Decision(batches=batches, stats=decision.stats)
+        clamped = Decision(batches=batches, stats=decision.stats,
+                           quants=decision.quants)
         # Feasibility is monotone under request removal for every shipped
         # policy, but the oracle is the contract — re-check, don't assume.
         assert policy.validate(env, clamped), \
@@ -116,7 +131,10 @@ class EngineExecutor(Executor):
                 continue
             engine = self.engines[mid]
             prompts, caps = engine.synth_prompts(batch, self.rng)
-            result = engine.generate(prompts, caps)
+            q = decision.quants.get(mid)
+            result = engine.generate(
+                prompts, caps,
+                quant_bits=None if q is None else q.weight_bits)
             tokens += int(result.lengths.sum())
         return tokens
 
@@ -201,6 +219,9 @@ class EpochRuntime:
             tokens = self.executor.execute(self.env, decision)
 
             sel = decision.selected
+            # the method each served model actually ran with this epoch
+            quants = {mid: decision.quant_for(mid, self.env).name
+                      for mid, batch in decision.batches.items() if batch}
             if counting:
                 m.served += len(sel)
                 m.batch_sizes.append(len(sel))
@@ -208,11 +229,17 @@ class EpochRuntime:
                 m.leaves_checked += decision.stats.leaves_checked
                 m.truncated += len(spilled)
                 m.generated_tokens += tokens
+                for mid, batch in decision.batches.items():
+                    if batch:
+                        name = quants[mid]
+                        m.served_by_method[name] = \
+                            m.served_by_method.get(name, 0) + len(batch)
             m.traces.append(EpochTrace(
                 epoch=e, arrived=len(arrivals), dropped=n_dropped,
                 selected_rids=[r.rid for r in sel], truncated=len(spilled),
                 nodes_visited=decision.stats.nodes_visited,
-                generated_tokens=tokens, counted=counting))
+                generated_tokens=tokens, counted=counting,
+                quants=quants))
 
             chosen = {r.rid for r in sel}
             queue = [r for r in queue if r.rid not in chosen]

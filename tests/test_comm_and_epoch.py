@@ -2,14 +2,21 @@
 from __future__ import annotations
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import comm
 from repro.core.environment import dbm_to_watt, paper_env
-from repro.core.epoch import simulate
 from repro.core.request import BITS_PER_TOKEN, Request, RequestGenerator
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 ENV = paper_env("bloom-3b", "W8A16")
+
+
+def simulate(env, policy, rate, n_epochs=30, seed=0):
+    return EpochRuntime(env, policy, AnalyticExecutor()).run(
+        rate=rate, n_epochs=n_epochs, seed=seed)
 
 
 @settings(max_examples=40, deadline=None)

@@ -7,6 +7,8 @@ from __future__ import annotations
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import problem, schedulers

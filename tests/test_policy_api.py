@@ -17,7 +17,6 @@ import pytest
 from conftest import reduced_cfg
 from repro.core import problem, schedulers
 from repro.core.environment import paper_env
-from repro.core.epoch import SimResult, simulate
 from repro.core.metrics import EpochMetrics
 from repro.core.multi import MultiLLMEnv, multi_feasible, tag
 from repro.core.policy import (CallablePolicy, Decision, SchedulerPolicy,
@@ -31,7 +30,8 @@ ENV = paper_env("bloom-3b", "W8A16")
 CANONICAL_SPECS = [
     "dftsp", "stb", "nob", "greedy", "brute_force", "multi-dftsp",
     "dftsp:d_sweep=false", "dftsp:fast_z_bound=false,prune=false",
-    "multi-dftsp:order=name",
+    "multi-dftsp:order=name", "dftsp:quant=auto", "dftsp:quant=W4A16-GPTQ",
+    "multi-dftsp:quant=auto", "multi-dftsp:order=name,quant=auto",
 ]
 
 
@@ -168,29 +168,33 @@ def test_model_id_is_a_dataclass_field():
     assert r.model_id == "bloom-3b"
 
 
-# -- runtime: shims, metrics units, decisions -------------------------------
+# -- runtime: metrics units, decisions --------------------------------------
 
 
-def test_simulate_shim_returns_unified_metrics():
-    res = simulate(ENV, "dftsp", rate=10, n_epochs=5, seed=7)
+def test_runtime_returns_unified_metrics():
+    res = EpochRuntime(ENV, "dftsp", AnalyticExecutor()).run(
+        rate=10, n_epochs=5, seed=7)
     assert isinstance(res, EpochMetrics)
-    assert SimResult is EpochMetrics                     # deprecated alias
     assert res.throughput == pytest.approx(
         res.served / (5 * ENV.T_E))                      # requests/second
     assert len(res.batch_sizes) == 5
     assert len(res.traces) == 6                          # + warmup epoch
     assert not res.traces[0].counted
+    # fixed-method runs attribute every served request to the env method
+    assert set(res.served_by_method) <= {ENV.quant.name}
 
 
-def test_runtime_equals_simulate_shim():
+def test_runtime_deterministic_across_runs():
     policy = get_policy("dftsp")
-    a = simulate(ENV, "dftsp", rate=10, n_epochs=5, seed=7)
+    a = EpochRuntime(ENV, "dftsp", AnalyticExecutor()).run(
+        rate=10, n_epochs=5, seed=7)
     b = EpochRuntime(ENV, policy, AnalyticExecutor()).run(
         rate=10, n_epochs=5, seed=7)
     assert (a.served, a.dropped, a.arrived, a.nodes_visited) == \
         (b.served, b.dropped, b.arrived, b.nodes_visited)
     assert [t.selected_rids for t in a.traces] == \
         [t.selected_rids for t in b.traces]
+    assert [t.quants for t in a.traces] == [t.quants for t in b.traces]
 
 
 def test_multi_llm_through_runtime():

@@ -1,0 +1,266 @@
+"""Quantization as a scheduling decision: refactor-seam tests.
+
+Golden equivalence: fixed-method policies must stay BIT-IDENTICAL to the
+pre-refactor runtime (per-epoch selected rids + aggregate counters were
+captured from the code base before ``quant`` became a decision variable).
+Property: ``quant=auto`` can never serve a smaller batch than the best
+single fixed method on the same queue, and dominates every fixed method
+end-to-end on a mixed accuracy-requirement workload.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import problem
+from repro.core.dftsp import dftsp_schedule, dftsp_schedule_auto
+from repro.core.environment import paper_env
+from repro.core.multi import MultiLLMEnv, multi_dftsp_assign, multi_feasible
+from repro.core.policy import Decision, get_policy
+from repro.core.quantization import (METHODS, candidate_methods, dominates,
+                                     get_method, pareto_methods)
+from repro.core.request import RequestGenerator
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
+
+ENV = paper_env("bloom-3b", "W8A16")
+
+
+def run(env, spec, rate=25, n_epochs=6, seed=11, gen=None):
+    return EpochRuntime(env, spec, AnalyticExecutor()).run(
+        rate=None if gen else rate, n_epochs=n_epochs, seed=seed, gen=gen)
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence with the pre-refactor runtime (captured at PR-2 base,
+# commit 9ed7029: quant frozen in EdgeEnv, rate=25, n_epochs=6, seed=11).
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    ("bloom-3b", "W8A16", "dftsp"): dict(
+        served=29, dropped=265, arrived=307, nodes=3761,
+        rids=[[], [32, 37, 38, 40, 34, 35], [85, 86, 88, 90],
+              [148, 138, 154, 141, 152, 142], [192, 191, 195],
+              [238, 243, 240, 246, 235], [305, 301, 297, 304, 300]]),
+    ("opt-13b", "W4A16-GPTQ", "dftsp"): dict(
+        served=6, dropped=293, arrived=307, nodes=198,
+        rids=[[], [40], [85, 86], [148], [], [246], [301]]),
+    ("bloom-3b", "W8A16", "stb"): dict(
+        served=9, dropped=281, arrived=307,
+        rids=[[], [25, 29], [67], [116, 120], [183, 184], [223], [275]]),
+    ("bloom-3b", "W8A16", "nob"): dict(
+        served=1, dropped=288, arrived=307,
+        rids=[[], [], [86], [], [], [], []]),
+    ("bloom-3b", "W8A16", "greedy"): dict(
+        served=20, dropped=271, arrived=307,
+        rids=[[], [32, 29, 40, 38], [85, 80, 70], [148, 138, 120],
+              [203, 193, 183], [238, 243, 240, 246, 235], [305, 278]]),
+}
+
+
+@pytest.mark.parametrize("model,quant,spec", sorted(k for k in GOLDEN))
+def test_fixed_method_runs_bit_identical_to_pre_refactor(model, quant, spec):
+    g = GOLDEN[(model, quant, spec)]
+    m = run(paper_env(model, quant), spec)
+    assert [t.selected_rids for t in m.traces] == g["rids"]
+    assert (m.served, m.dropped, m.arrived) == \
+        (g["served"], g["dropped"], g["arrived"])
+    if "nodes" in g:
+        assert m.nodes_visited == g["nodes"]
+
+
+def test_multi_dftsp_bit_identical_to_pre_refactor():
+    menv = MultiLLMEnv.host({
+        "bloom-3b": paper_env("bloom-3b", "W8A16"),
+        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+    })
+
+    def tagger(arrivals):
+        for i, r in enumerate(arrivals):
+            r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+        return arrivals
+
+    m = EpochRuntime(menv, "multi-dftsp", AnalyticExecutor()).run(
+        rate=40, n_epochs=4, seed=3, tag_arrivals=tagger)
+    assert (m.served, m.dropped, m.arrived, m.nodes_visited) == \
+        (23, 270, 309, 1559)
+    assert [t.selected_rids for t in m.traces] == [
+        [], [52, 62, 46, 64, 58, 61], [151, 137, 139, 123, 143, 152],
+        [233, 231, 209, 237, 236], [306, 308, 302, 304, 294, 305]]
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_explicit_quant_equals_env_quant(seed):
+    """dftsp parameterized by env's own method == the implicit default,
+    decision by decision (the refactor seam is invisible)."""
+    reqs = RequestGenerator(rate=40, seed=seed).within(0, 2.0)
+    a, sa = dftsp_schedule(ENV, reqs)
+    b, sb = dftsp_schedule(ENV, reqs, quant=ENV.quant)
+    assert [r.rid for r in a] == [r.rid for r in b]
+    assert (sa.nodes_visited, sa.z_solved) == (sb.nodes_visited, sb.z_solved)
+    pol_env = run(ENV, "dftsp", rate=25, seed=seed)
+    pol_fix = run(ENV, "dftsp:quant=W8A16", rate=25, seed=seed)
+    assert [t.selected_rids for t in pol_env.traces] == \
+        [t.selected_rids for t in pol_fix.traces]
+    assert pol_env.served == pol_fix.served
+
+
+# ---------------------------------------------------------------------------
+# Method prefilter / Pareto pruning
+# ---------------------------------------------------------------------------
+
+
+def test_dominates_requires_all_axes():
+    w16, w8a16 = get_method("W16A16"), get_method("W8A16")
+    w8a8 = get_method("W8A8")
+    # W8A16 is cheaper on alpha/beta but loses accuracy: no dominance
+    assert not dominates(w8a16, w16, "bloom-3b")
+    assert not dominates(w16, w8a16, "bloom-3b")
+    assert not dominates(w8a8, w8a16, "bloom-3b")
+    assert {m.name for m in pareto_methods(METHODS.values(), "bloom-3b")} \
+        == set(METHODS)
+    # a strictly-worse synthetic method IS dropped
+    from repro.core.quantization import QuantMethod
+    bad = QuantMethod("W8A16-bad", 8, 16, beta=0.9, dppl_default=0.9)
+    front = pareto_methods(list(METHODS.values()) + [bad], "bloom-3b")
+    assert {m.name for m in front} == set(METHODS)
+
+
+def test_candidate_methods_accuracy_prefilter():
+    # nobody tolerates dPPL >= 0.6 => the W4 methods drop out on bloom-3b
+    cands = candidate_methods("bloom-3b", accuracies=[0.9])
+    names = {m.name for m in cands}
+    assert "W4A16-GPTQ" not in names and "W4A16-ZQL" not in names
+    assert "W16A16" in names
+    # fastest-first deterministic order
+    betas = [m.beta for m in cands]
+    assert betas == sorted(betas)
+    # demand nobody can meet under any quantized model: only exact-dppl==0
+    assert {m.name for m in candidate_methods("bloom-3b",
+                                              accuracies=[1.0])} == {"W16A16"}
+
+
+# ---------------------------------------------------------------------------
+# quant=auto optimality properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_auto_never_smaller_than_best_fixed_same_queue(seed):
+    """Schedule-level: the (z, method) descent's first hit is the max
+    batch size over every method — auto >= each fixed method."""
+    reqs = RequestGenerator(rate=50, seed=seed).within(0, 2.0)
+    sel, method, _ = dftsp_schedule_auto(ENV, reqs)
+    assert method.name in METHODS
+    fixed = {name: len(dftsp_schedule(ENV, reqs, quant=q)[0])
+             for name, q in METHODS.items()}
+    assert len(sel) >= max(fixed.values())
+    # and the chosen method itself achieves that size
+    assert len(sel) == fixed[method.name]
+    # the batch is feasible under the chosen method
+    assert problem.feasible(ENV, sel, quant=method)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_auto_throughput_dominates_every_fixed_method(seed):
+    """End-to-end acceptance: on a mixed accuracy-requirement workload the
+    adaptive policy's throughput >= every fixed METHODS deployment."""
+    def served(spec):
+        gen = RequestGenerator(rate=60, seed=seed, acc_range=(0.0, 1.0))
+        return run(ENV, spec, n_epochs=10, seed=seed, gen=gen).served
+
+    auto = served("dftsp:quant=auto")
+    for name in METHODS:
+        assert auto >= served(f"dftsp:quant={name}"), name
+
+
+def test_auto_records_decided_methods_per_epoch():
+    gen = RequestGenerator(rate=30, seed=0, acc_range=(0.9, 1.0))
+    m = run(ENV, "dftsp:quant=auto", n_epochs=8, seed=0, gen=gen)
+    assert sum(m.served_by_method.values()) == m.served
+    assert len(m.served_by_method) >= 2          # strict pool forces a mix
+    for t in m.traces:
+        if t.selected_rids:
+            assert set(t.quants.values()) <= set(METHODS)
+        else:
+            assert t.quants == {}
+
+
+def test_auto_respects_accuracy_on_strict_requests():
+    """A request demanding a > f(dPPL(W8A16)) can only be served at
+    W16A16 — auto must select it rather than drop the request."""
+    gen = RequestGenerator(rate=10, seed=1, acc_range=(0.96, 1.0))
+    m = run(ENV, "dftsp:quant=auto", n_epochs=6, seed=1, gen=gen)
+    assert m.served > 0
+    assert set(m.served_by_method) == {"W16A16"}
+
+
+def test_auto_validates_under_decided_method():
+    """The policy oracle must judge the decision under the method it
+    decided, not the env default (W16A16 batches of strict requests are
+    infeasible under the env's W8A16)."""
+    policy = get_policy("dftsp:quant=auto")
+    gen = RequestGenerator(rate=20, seed=2, acc_range=(0.96, 1.0))
+    queue = gen.within(0, 2.0)
+    decision = policy.schedule(ENV, queue)
+    assert decision.size > 0
+    assert decision.quants[None].name == "W16A16"
+    assert policy.validate(ENV, decision)
+    # the same batch under the env default fails the accuracy constraint
+    assert not problem.feasible(ENV, decision.selected)
+    # and a tampered decision claiming the env method must be rejected
+    tampered = Decision(batches=decision.batches, stats=decision.stats)
+    assert not policy.validate(ENV, tampered)
+
+
+# ---------------------------------------------------------------------------
+# multi-LLM per-model method selection
+# ---------------------------------------------------------------------------
+
+
+def _menv():
+    return MultiLLMEnv.host({
+        "bloom-3b": paper_env("bloom-3b", "W8A16"),
+        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+    })
+
+
+def _tagged_pool(seed=0, rate=40, **kw):
+    gen = RequestGenerator(rate=rate, seed=seed, **kw)
+    reqs = gen.within(0, 2.0)
+    for i, r in enumerate(reqs):
+        r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+    return reqs
+
+
+def test_multi_auto_assigns_per_model_and_stays_feasible():
+    menv = _menv()
+    batches, quants, stats = multi_dftsp_assign(menv, _tagged_pool(seed=4),
+                                                quant="auto")
+    assert set(quants) == set(menv.envs)
+    assert stats.z_solved == sum(len(b) for b in batches.values())
+    assert multi_feasible(menv, batches, quants=quants)
+
+
+def test_multi_auto_never_below_fixed_default():
+    for seed in range(3):
+        pool = _tagged_pool(seed=seed, rate=50)
+        menv = _menv()
+        fixed, _, _ = multi_dftsp_assign(menv, pool)
+        auto, _, _ = multi_dftsp_assign(menv, pool, quant="auto")
+        assert sum(len(b) for b in auto.values()) >= \
+            sum(len(b) for b in fixed.values()), seed
+
+
+def test_multi_auto_through_runtime_records_quants():
+    menv = _menv()
+
+    def tagger(arrivals):
+        for i, r in enumerate(arrivals):
+            r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+        return arrivals
+
+    m = EpochRuntime(menv, "multi-dftsp:quant=auto", AnalyticExecutor()).run(
+        rate=40, n_epochs=4, seed=3, tag_arrivals=tagger)
+    assert m.served > 0
+    assert sum(m.served_by_method.values()) == m.served
+    for t in m.traces:
+        assert set(t.quants) <= set(menv.envs)

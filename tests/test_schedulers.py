@@ -5,10 +5,15 @@ import pytest
 
 from repro.core import problem, schedulers
 from repro.core.environment import paper_env, tpu_env
-from repro.core.epoch import simulate, sweep
 from repro.core.request import Request, RequestGenerator
+from repro.serving.runtime import AnalyticExecutor, EpochRuntime
 
 ENV = paper_env("bloom-3b", "W8A16")
+
+
+def simulate(env, policy, rate, n_epochs=30, seed=0):
+    return EpochRuntime(env, policy, AnalyticExecutor()).run(
+        rate=rate, n_epochs=n_epochs, seed=seed)
 
 
 def test_static_batch_size_is_feasible_worst_case():
@@ -58,8 +63,8 @@ def test_simulation_conservation():
 
 def test_paper_fig5a_ordering():
     """DFTSP >= StB and >= NoB in served throughput (Fig. 5a claim)."""
-    out = sweep(ENV, ["dftsp", "stb", "nob"], rates=[20], n_epochs=10)
-    thr = {k: v[0].throughput for k, v in out.items()}
+    thr = {s: simulate(ENV, s, rate=20, n_epochs=10).throughput
+           for s in ("dftsp", "stb", "nob")}
     assert thr["dftsp"] >= thr["stb"]
     assert thr["dftsp"] >= thr["nob"]
 

@@ -6,8 +6,9 @@ import pytest
 
 from conftest import reduced_cfg
 from repro.core.environment import paper_env
+from repro.core.request import RequestGenerator
 from repro.serving.engine import ServingEngine
-from repro.serving.simulator import serve_epochs
+from repro.serving.runtime import EngineExecutor, EpochRuntime
 
 
 @pytest.fixture(scope="module")
@@ -50,9 +51,40 @@ def test_pad_prompts_right_aligned(engine):
     assert out[0, :-3].sum() == 0
 
 
-def test_serve_epochs_end_to_end(engine):
+def test_engine_runtime_end_to_end(engine):
     env = paper_env("bloom-3b", "W8A16")
-    trace = serve_epochs(env, engine, "dftsp", rate=5, n_epochs=3, seed=0)
+    trace = EpochRuntime(env, "dftsp", EngineExecutor(engine, seed=0)).run(
+        rate=5, n_epochs=3, seed=0, warmup_epochs=0)
     assert trace.epochs == 3
     assert trace.served >= 0
     assert len(trace.batches) == 3
+
+
+def test_params_for_caches_each_precision():
+    cfg = reduced_cfg("bloom-3b")
+    eng = ServingEngine(cfg, batch_capacity=2, s_max=16, n_max=4)
+    p16 = eng.params_for(16)
+    assert p16 is eng.params_for(0)          # 16 == full precision
+    assert eng.params_for(8) is eng.params_for(8)      # quantized once
+    assert set(eng._params_cache) == {0, 8}
+    r8 = eng.generate([[1, 2, 3]], n_tokens=[4], quant_bits=8)
+    r16 = eng.generate([[1, 2, 3]], n_tokens=[4], quant_bits=16)
+    assert r8.tokens.shape == r16.tokens.shape == (1, 4)
+    assert eng.precisions_served == {0, 8}
+
+
+def test_engine_serves_decided_precisions_in_one_run():
+    """quant=auto on a strict-accuracy workload mixes W16A16 and W8A16
+    epochs; the engine must execute both precisions via the weight
+    cache (acceptance criterion for quantization-as-control)."""
+    cfg = reduced_cfg("bloom-3b")
+    eng = ServingEngine(cfg, batch_capacity=8, s_max=16, n_max=4)
+    env = paper_env("bloom-3b", "W8A16")
+    gen = RequestGenerator(rate=30, seed=0, acc_range=(0.9, 1.0))
+    m = EpochRuntime(env, "dftsp:quant=auto",
+                     EngineExecutor(eng, seed=0)).run(
+        n_epochs=8, seed=0, gen=gen, warmup_epochs=0)
+    assert m.served > 0
+    assert len(m.served_by_method) >= 2          # adaptive method mix
+    assert len(eng.precisions_served) >= 2       # distinct weight bits
+    assert set(eng.precisions_served) <= set(eng._params_cache)
