@@ -23,6 +23,7 @@ def main(argv=None):
                             fig6_adaptive as f6ad,
                             table3_pruning_complexity as t3,
                             multi_llm_throughput as ml,
+                            engine_decode as ed,
                             roofline_report as rr)
 
     results = {}
@@ -34,6 +35,7 @@ def main(argv=None):
             ("fig6_adaptive", f6ad, {"n_epochs": n}),
             ("table3", t3, {"n_epochs": max(4, n // 3)}),
             ("multi_llm", ml, {"n_epochs": max(6, n // 2)}),
+            ("engine_decode", ed, {"fast": args.fast}),
             ("roofline", rr, {})):
         t0 = time.time()
         print(f"\n{'=' * 70}\n[bench] {name}\n{'=' * 70}")

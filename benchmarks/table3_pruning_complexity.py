@@ -2,7 +2,9 @@
 
 Paper's claims: reduction grows with arrival rate; >=45% at rate 10,
 ~98% at rate 200.  Complexity is measured in visited tree nodes
-(hardware-independent, exactly what the pruning eliminates).
+(hardware-independent, exactly what the pruning eliminates) AND in mean
+wall-clock per ``dftsp_schedule`` call, so scheduler perf regressions
+show up in ``table3.json`` even when node counts stay flat.
 
 Both searchers see the same slack-ranked candidate pool capped at
 POOL_CAP requests per epoch (an admission prefilter): without it the
@@ -10,6 +12,8 @@ un-pruned search is not merely slower, it is computationally infeasible
 at rate >= 100 — which over-proves the paper's point but never finishes.
 """
 from __future__ import annotations
+
+import time
 
 from benchmarks.common import render, save_table
 from repro.core.dftsp import dftsp_schedule
@@ -21,33 +25,43 @@ RATES = [10, 50, 100, 200]
 POOL_CAP = 36
 
 
-def _capped(env, reqs, **kw):
-    pool = sorted(reqs, key=lambda r: r.tau - r.t_w, reverse=True)[:POOL_CAP]
-    return dftsp_schedule(env, pool, **kw)
+def _timed(times, **kw):
+    """A capped-pool scheduler that appends each call's wall-clock to
+    ``times`` (seconds per ``dftsp_schedule`` invocation)."""
+    def sched(env, reqs):
+        pool = sorted(reqs, key=lambda r: r.tau - r.t_w,
+                      reverse=True)[:POOL_CAP]
+        t0 = time.perf_counter()
+        out = dftsp_schedule(env, pool, **kw)
+        times.append(time.perf_counter() - t0)
+        return out
+    return sched
 
 
-def _fast(env, reqs):
-    return _capped(env, reqs)
-
-
-def _slow(env, reqs):
-    return _capped(env, reqs, prune=False, order_desc=False,
-                   fast_z_bound=False)
+def _ms(times) -> float:
+    return 1e3 * sum(times) / max(len(times), 1)
 
 
 def run(n_epochs: int = 6, seed: int = 0, quiet: bool = False):
     env = paper_env("bloom-3b", "W8A16")
     rows = []
     for rate in RATES:
-        fast = EpochRuntime(env, CallablePolicy(_fast), AnalyticExecutor()) \
+        fast_t: list = []
+        slow_t: list = []
+        fast = EpochRuntime(env, CallablePolicy(_timed(fast_t)),
+                            AnalyticExecutor()) \
             .run(rate=rate, n_epochs=n_epochs, seed=seed)
-        slow = EpochRuntime(env, CallablePolicy(_slow), AnalyticExecutor()) \
+        slow = EpochRuntime(env, CallablePolicy(_timed(
+            slow_t, prune=False, order_desc=False, fast_z_bound=False)),
+            AnalyticExecutor()) \
             .run(rate=rate, n_epochs=n_epochs, seed=seed)
         assert fast.served == slow.served, "pruning changed the optimum!"
         red = 1.0 - fast.nodes_visited / max(slow.nodes_visited, 1)
         rows.append([rate, slow.nodes_visited, fast.nodes_visited,
-                     f"{100 * red:.2f}%"])
-    header = ["arrival_rate", "brute_nodes", "dftsp_nodes", "reduction"]
+                     f"{100 * red:.2f}%",
+                     round(_ms(slow_t), 3), round(_ms(fast_t), 3)])
+    header = ["arrival_rate", "brute_nodes", "dftsp_nodes", "reduction",
+              "brute_ms_per_call", "dftsp_ms_per_call"]
     out = render(header, rows, "Table III: tree-pruning complexity reduction")
     if not quiet:
         print(out)

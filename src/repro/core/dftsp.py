@@ -68,9 +68,15 @@ class SearchStats:
 
 def _group_by_level(pool: Sequence[Request]) -> Tuple[List[int],
                                                       Dict[int, List[Request]]]:
-    levels = sorted({r.n for r in pool})
-    groups = {lv: sorted([r for r in pool if r.n == lv], key=lambda r: r.rho_u)
-              for lv in levels}
+    """Level groups N_1 < ... < N_K, cheapest-uplink first within a level,
+    built from ONE sort of the pool (not a rescan per level)."""
+    levels: List[int] = []
+    groups: Dict[int, List[Request]] = {}
+    for r in sorted(pool, key=lambda r: (r.n, r.rho_u)):
+        if not levels or r.n != levels[-1]:
+            levels.append(r.n)
+            groups[r.n] = []
+        groups[r.n].append(r)
     return levels, groups
 
 
@@ -290,12 +296,15 @@ def dftsp_schedule_auto(env: EdgeEnv, requests: Sequence[Request],
     model = env.model.arch_id
     cands = candidate_methods(model, accuracies=[r.a for r in requests],
                               methods=methods)
+    # rho_u/rho_d/kv_tok/dec_flops are quant-independent (alpha/beta scale
+    # them inside _Ctx / the oracles), so annotate the queue ONCE and share
+    # the cached quantities across every candidate method's pool.
+    annotated = _annotate(env, requests)
     entries = []          # (method, ctx, coeff, pool, z upper bound)
     for m in cands:
-        pool = problem.filter_accuracy(env, requests, m)
+        pool = problem.filter_accuracy(env, annotated, m)
         if not pool:
             continue
-        pool = _annotate(env, pool)
         bound = _z_upper_bound(env, pool, m) if fast_z_bound else len(pool)
         if bound < 1:
             continue

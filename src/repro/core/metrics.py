@@ -22,6 +22,12 @@ class EpochTrace:
     ``quants`` records the quantization method the control plane decided
     for each served model this epoch (``{model_id: method_name}``; the
     ``None`` key on a single-model node) — empty when nothing was served.
+    ``wall_s`` is the measured wall-clock of this epoch's
+    ``executor.execute`` call — the data plane's real execution time under
+    ``EngineExecutor``; under the analytic executor (which charges
+    cost-model time and runs nothing) it is just microseconds of Python
+    overhead, so use ``tokens_per_s``/``generated_tokens`` (0 for
+    analytic) to tell the paths apart, not ``wall_s``.
     """
     epoch: int
     arrived: int
@@ -32,6 +38,13 @@ class EpochTrace:
     generated_tokens: int = 0
     counted: bool = True
     quants: Dict[Optional[str], str] = field(default_factory=dict)
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Decode throughput of this epoch's real execution (0 if nothing
+        ran or nothing was generated)."""
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
 
 @dataclass
@@ -43,6 +56,8 @@ class EpochMetrics:
     arrived: int = 0
     truncated: int = 0            # scheduled but spilled past engine capacity
     generated_tokens: int = 0     # real-engine paths only (0 for analytic)
+    wall_s: float = 0.0           # summed execute() wall-clock (counted
+                                  # epochs; ~0 but nonzero for analytic)
     batch_sizes: List[int] = field(default_factory=list)
     nodes_visited: int = 0
     leaves_checked: int = 0
@@ -54,6 +69,12 @@ class EpochMetrics:
         """Requests served per second (paper objective) — in BOTH the
         analytic and the real-engine path."""
         return self.served / max(self.n_epochs * self.T_E, 1e-12)
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Measured decode throughput of the real data plane: generated
+        tokens per second of executor wall-clock (0 for analytic runs)."""
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
     @property
     def mean_batch(self) -> float:

@@ -3,8 +3,20 @@
 This is the data plane behind the paper's scheduler (the control plane).
 A scheduled batch of prompts is padded to the epoch's s' (exactly the
 paper's 'extend all prompts to the maximum length' assumption), prefilled
-in one pass, then decoded token-by-token under a ``lax.scan`` / while loop
-with per-request EOS and max-length masks.
+in one pass, then decoded by a single **device-resident**
+``jax.lax.while_loop``: greedy sampling, EOS detection and per-request
+output caps are all ``jnp`` ops inside one compiled program, which exits
+early once every row is done.  The host never sees a token until the
+whole batch finishes — per ``generate`` call there is exactly ONE
+host→device transfer (the padded prompts + caps, a single
+``jax.device_put``) and ONE device→host transfer (the token buffer +
+lengths, a single ``jax.device_get``).  The KV cache produced by prefill
+is donated into the decode-loop executable (``donate_argnums``, on
+backends that support donation) so the loop carries it in place instead
+of copying it at entry.  The historical token-by-token Python loop — one
+blocking ``argmax`` transfer per token — survives only as
+``generate_reference``, the interpret-style oracle the equivalence tests
+compare against.
 
 Static shapes: (batch_capacity, s') for prefill and a KV cache capacity of
 s' + n_max — one compiled executable serves every epoch (TPU-friendly, and
@@ -21,9 +33,8 @@ load, see DESIGN.md §3).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +53,7 @@ class GenerationResult:
 
 
 class ServingEngine:
-    """Fixed-shape batched prefill + decode executor for one model."""
+    """Fixed-shape batched prefill + fused-decode executor for one model."""
 
     def __init__(self, cfg: ModelConfig, params: Any = None,
                  batch_capacity: int = 8, s_max: int = 512,
@@ -62,8 +73,13 @@ class ServingEngine:
         self.params = self.params_for(quant_bits)
         self.precisions_served: set = set()  # bit-widths generate() ran at
         self.cache_len = s_max + n_max
-        self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn)
+        # the fused decode loop consumes the prefill cache in place; CPU
+        # does not implement donation (it would only warn), so gate it
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._decode_loop = jax.jit(self._decode_loop_fn,
+                                    donate_argnums=donate)
 
     # -- multi-precision weight cache ---------------------------------------
 
@@ -90,10 +106,51 @@ class ServingEngine:
     # -- compiled step functions --------------------------------------------
 
     def _prefill_fn(self, params, batch):
-        return self.model.prefill(params, batch, self.cache_len)
+        """Prompt pass; returns (first sampled token (B,), KV cache)."""
+        logits, cache = self.model.prefill(params, batch, self.cache_len)
+        cur = jnp.argmax(logits[..., :self.cfg.vocab], -1).astype(jnp.int32)
+        return cur, cache
 
     def _decode_fn(self, params, cache, tokens, pos):
         return self.model.decode_step(params, cache, tokens, pos)
+
+    def _decode_loop_fn(self, params, cache, cur, caps):
+        """The entire autoregressive stage as ONE ``lax.while_loop``.
+
+        Carries ``(cache, cur, out, lengths, done, t)`` on device; emits
+        ``cur`` into ``out[:, t]`` for rows still alive (not done, under
+        cap), flags EOS rows, steps the model, and exits as soon as no row
+        can emit again.  Mirrors ``generate_reference`` bit for bit: dead
+        rows keep stepping through the model (their cache writes are
+        irrelevant — they never emit again), exactly like the legacy loop.
+        """
+        B = cur.shape[0]
+        out0 = jnp.zeros((B, self.n_max), jnp.int32)
+        lengths0 = jnp.zeros((B,), jnp.int32)
+        done0 = jnp.zeros((B,), bool)
+
+        def alive_mask(done, t):
+            return (~done) & (t < caps)
+
+        def cond(state):
+            _, _, _, _, done, t = state
+            return (t < self.n_max) & jnp.any(alive_mask(done, t))
+
+        def body(state):
+            cache, cur, out, lengths, done, t = state
+            alive = alive_mask(done, t)
+            out = out.at[:, t].set(jnp.where(alive, cur, out[:, t]))
+            lengths = lengths + alive.astype(jnp.int32)
+            done = done | ((cur == self.eos_id) & alive)
+            logits, cache = self.model.decode_step(
+                params, cache, cur[:, None], self.s_max + t)
+            cur = jnp.argmax(logits[..., :self.cfg.vocab],
+                             -1).astype(jnp.int32)
+            return cache, cur, out, lengths, done, t + 1
+
+        state = (cache, cur, out0, lengths0, done0, jnp.int32(0))
+        _, _, out, lengths, _, _ = jax.lax.while_loop(cond, body, state)
+        return out, lengths
 
     # -- public API ----------------------------------------------------------
 
@@ -116,14 +173,9 @@ class ServingEngine:
             out[i, -len(p):] = p        # right-aligned => last slot is last
         return out
 
-    def generate(self, prompts: Sequence[Sequence[int]],
-                 n_tokens: Optional[Sequence[int]] = None,
-                 greedy: bool = True,
-                 quant_bits: Optional[int] = None) -> GenerationResult:
-        """Prefill + decode a batch.  n_tokens caps each request's output.
-        ``quant_bits`` serves this batch at an explicit weight precision
-        (via the multi-precision cache); ``None`` uses the engine
-        default."""
+    def _prepare(self, prompts, n_tokens, quant_bits):
+        """Shared generate() front half: resolve weights, pad the batch and
+        ship (prompts, caps) to the device in ONE ``jax.device_put``."""
         bits = self.default_bits if quant_bits is None \
             else self._canon_bits(quant_bits)
         params = self.params_for(bits)
@@ -136,7 +188,7 @@ class ServingEngine:
             caps[:nb] = np.minimum(np.asarray(n_tokens, np.int32), self.n_max)
         caps[nb:] = 0
 
-        tokens = jnp.asarray(self.pad_prompts(prompts))
+        tokens, caps_j = jax.device_put((self.pad_prompts(prompts), caps))
         batch = {"tokens": tokens}
         if self.cfg.family == "vlm":
             batch["patch_embeds"] = jnp.zeros(
@@ -146,14 +198,46 @@ class ServingEngine:
             batch["audio_embeds"] = jnp.zeros(
                 (B, self.cfg.encdec.n_audio_frames, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
-        logits, cache = self._prefill(params, batch)
+        return params, batch, caps_j, caps, nb
 
-        caps_j = jnp.asarray(caps)
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 n_tokens: Optional[Sequence[int]] = None,
+                 greedy: bool = True,
+                 quant_bits: Optional[int] = None) -> GenerationResult:
+        """Prefill + fused device-resident decode of one batch.
+
+        ``n_tokens`` caps each request's output; ``quant_bits`` serves this
+        batch at an explicit weight precision (via the multi-precision
+        cache), ``None`` uses the engine default.  Exactly one
+        host→device and one device→host transfer happen per call — every
+        token decision (sampling, EOS, caps) stays on device inside
+        ``_decode_loop_fn``.
+        """
+        params, batch, caps_j, _, nb = self._prepare(prompts, n_tokens,
+                                                     quant_bits)
+        cur, cache = self._prefill(params, batch)
+        out_j, lengths_j = self._decode_loop(params, cache, cur, caps_j)
+        out, lengths = jax.device_get((out_j, lengths_j))
+        return GenerationResult(tokens=out[:nb], lengths=lengths[:nb],
+                                batch=nb)
+
+    def generate_reference(self, prompts: Sequence[Sequence[int]],
+                           n_tokens: Optional[Sequence[int]] = None,
+                           greedy: bool = True,
+                           quant_bits: Optional[int] = None
+                           ) -> GenerationResult:
+        """The legacy host-driven decode loop, kept as the interpret-style
+        oracle: one blocking device→host transfer PER TOKEN.  The fused
+        path must match it bit for bit (see tests/test_serving.py)."""
+        params, batch, _, caps, nb = self._prepare(prompts, n_tokens,
+                                                   quant_bits)
+        B = self.batch_capacity
+        cur_j, cache = self._prefill(params, batch)
+        cur = np.asarray(jax.device_get(cur_j), np.int32)
+
         out = np.zeros((B, self.n_max), np.int32)
         lengths = np.zeros((B,), np.int32)
         done = np.zeros((B,), bool)
-        cur = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1),
-                         np.int32)
 
         for t in range(int(caps.max(initial=0))):
             alive = (~done) & (t < caps)
@@ -165,7 +249,8 @@ class ServingEngine:
             step_tok = jnp.asarray(cur)[:, None]
             pos = jnp.int32(self.s_max + t)
             logits, cache = self._decode(params, cache, step_tok, pos)
-            cur = np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1),
-                             np.int32)
+            cur = np.asarray(
+                jax.device_get(
+                    jnp.argmax(logits[..., :self.cfg.vocab], -1)), np.int32)
         return GenerationResult(tokens=out[:nb], lengths=lengths[:nb],
                                 batch=nb)

@@ -19,12 +19,17 @@ here exactly once, parameterized on two axes:
 
 The epoch loop records each epoch's decided method per model in its
 ``EpochTrace.quants`` and aggregates ``EpochMetrics.served_by_method``,
-so adaptive-precision runs are auditable epoch by epoch.  (The historical
+so adaptive-precision runs are auditable epoch by epoch.  It also times
+every ``executor.execute`` call (``EpochTrace.wall_s``, aggregated into
+``EpochMetrics.wall_s`` / ``tokens_per_s``) — under ``EngineExecutor``
+that is the real data plane's measured decode throughput, since
+``ServingEngine.generate`` blocks on its single device→host transfer.  (The historical
 ``simulate`` / ``serve_epochs`` / ``sweep`` shims are gone; drive this
 class directly.)
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, List, Optional, Tuple, Union
 
 import numpy as np
@@ -216,7 +221,11 @@ class EpochRuntime:
             # (schedulers must not cheat)
             assert self.policy.validate(self.env, decision), \
                 f"{self.policy.spec} returned an infeasible batch"
+            # real executors block on the result (ServingEngine.generate
+            # device_gets), so this wall-clock is the data plane's t_A+t_I
+            t_exec = time.perf_counter()
             tokens = self.executor.execute(self.env, decision)
+            wall_s = time.perf_counter() - t_exec
 
             sel = decision.selected
             # the method each served model actually ran with this epoch
@@ -229,6 +238,7 @@ class EpochRuntime:
                 m.leaves_checked += decision.stats.leaves_checked
                 m.truncated += len(spilled)
                 m.generated_tokens += tokens
+                m.wall_s += wall_s
                 for mid, batch in decision.batches.items():
                     if batch:
                         name = quants[mid]
@@ -239,7 +249,7 @@ class EpochRuntime:
                 selected_rids=[r.rid for r in sel], truncated=len(spilled),
                 nodes_visited=decision.stats.nodes_visited,
                 generated_tokens=tokens, counted=counting,
-                quants=quants))
+                quants=quants, wall_s=wall_s))
 
             chosen = {r.rid for r in sel}
             queue = [r for r in queue if r.rid not in chosen]

@@ -1,6 +1,13 @@
-"""Serving engine + end-to-end DFTSP-driven serving."""
+"""Serving engine + end-to-end DFTSP-driven serving.
+
+Includes the decode-loop contract tests: the fused device-resident
+``lax.while_loop`` path (``generate``) must match the legacy host-driven
+loop (``generate_reference``) bit for bit, with exactly ONE host→device
+and ONE device→host transfer per batch.
+"""
 from __future__ import annotations
 
+import jax
 import numpy as np
 import pytest
 
@@ -9,6 +16,12 @@ from repro.core.environment import paper_env
 from repro.core.request import RequestGenerator
 from repro.serving.engine import ServingEngine
 from repro.serving.runtime import EngineExecutor, EpochRuntime
+
+
+def assert_same_generation(a, b):
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    np.testing.assert_array_equal(a.lengths, b.lengths)
+    assert a.batch == b.batch
 
 
 @pytest.fixture(scope="module")
@@ -58,6 +71,91 @@ def test_engine_runtime_end_to_end(engine):
     assert trace.epochs == 3
     assert trace.served >= 0
     assert len(trace.batches) == 3
+    # real data plane => per-epoch wall-clock is measured and aggregated
+    assert trace.wall_s > 0
+    assert trace.wall_s == pytest.approx(
+        sum(t.wall_s for t in trace.traces if t.counted))
+    if trace.generated_tokens:
+        assert trace.tokens_per_s > 0
+        assert any(t.tokens_per_s > 0 for t in trace.traces)
+
+
+# -- fused decode-loop contract ---------------------------------------------
+
+
+def test_fused_matches_reference_edge_cases(engine):
+    """cap=0 rows, pad-token prompts and padding-only rows (fewer prompts
+    than batch_capacity) all decode bit-identically to the legacy loop."""
+    prompts = [[1, 2, 3], [0, 0], [7]]       # slot 4 stays padding-only
+    caps = [5, 0, 8]
+    a = engine.generate(prompts, n_tokens=caps)
+    b = engine.generate_reference(prompts, n_tokens=caps)
+    assert_same_generation(a, b)
+    assert a.lengths[1] == 0                 # cap=0 row emits nothing
+    assert np.all(a.tokens[1] == 0)
+
+
+def test_fused_matches_reference_empty_batch(engine):
+    a = engine.generate([], n_tokens=[])
+    b = engine.generate_reference([], n_tokens=[])
+    assert_same_generation(a, b)
+    assert a.tokens.shape == (0, engine.n_max)
+
+
+@pytest.mark.parametrize("bits", [0, 8, 4])
+def test_fused_matches_reference_all_precisions(engine, bits):
+    """Equivalence holds for every bit-width the engine caches — the
+    quant_bits override routes both paths through the same weight tree."""
+    prompts = [[5, 6, 7], [1, 2], [9, 9, 9, 9]]
+    a = engine.generate(prompts, n_tokens=[8, 3, 6], quant_bits=bits)
+    b = engine.generate_reference(prompts, n_tokens=[8, 3, 6],
+                                  quant_bits=bits)
+    assert_same_generation(a, b)
+    assert a.lengths.max() >= 1
+
+
+def test_fused_immediate_eos(engine):
+    """A row whose FIRST sampled token is EOS emits exactly one token in
+    both paths (the EOS itself, as the legacy loop always did)."""
+    ref = engine.generate_reference([[9, 8, 7]], n_tokens=[6])
+    tok0 = int(ref.tokens[0, 0])
+    eng2 = ServingEngine(engine.cfg, params=engine._raw_params,
+                         batch_capacity=4, s_max=32, n_max=8, eos_id=tok0)
+    a = eng2.generate([[9, 8, 7]], n_tokens=[6])
+    b = eng2.generate_reference([[9, 8, 7]], n_tokens=[6])
+    assert_same_generation(a, b)
+    assert a.lengths[0] == 1
+    assert a.tokens[0, 0] == tok0
+    assert np.all(a.tokens[0, 1:] == 0)
+
+
+def test_fused_generate_single_host_sync(engine, monkeypatch):
+    """The one-transfer-per-batch contract, probed at the real transfer
+    points: fused generate makes exactly ONE device_put (prompts + caps)
+    and ONE device_get (tokens + lengths); the reference loop pays one
+    blocking device_get per decoded token on top."""
+    counts = {"get": 0, "put": 0}
+    real_get, real_put = jax.device_get, jax.device_put
+
+    def counting_get(x):
+        counts["get"] += 1
+        return real_get(x)
+
+    def counting_put(x):
+        counts["put"] += 1
+        return real_put(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    monkeypatch.setattr(jax, "device_put", counting_put)
+
+    engine.generate([[1, 2, 3], [4, 5, 6]], n_tokens=[5, 5])
+    assert counts == {"get": 1, "put": 1}
+
+    counts.update(get=0, put=0)
+    ref = engine.generate_reference([[1, 2, 3], [4, 5, 6]], n_tokens=[5, 5])
+    # first token + one argmax sync per decode step
+    assert counts["get"] == 1 + int(ref.lengths.max())
+    assert counts["get"] > 1
 
 
 def test_params_for_caches_each_precision():
