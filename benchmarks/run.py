@@ -24,6 +24,7 @@ def main(argv=None):
                             table3_pruning_complexity as t3,
                             multi_llm_throughput as ml,
                             engine_decode as ed,
+                            continuous_vs_epoch as cve,
                             roofline_report as rr)
 
     results = {}
@@ -36,6 +37,7 @@ def main(argv=None):
             ("table3", t3, {"n_epochs": max(4, n // 3)}),
             ("multi_llm", ml, {"n_epochs": max(6, n // 2)}),
             ("engine_decode", ed, {"fast": args.fast}),
+            ("continuous", cve, {"fast": args.fast}),
             ("roofline", rr, {})):
         t0 = time.time()
         print(f"\n{'=' * 70}\n[bench] {name}\n{'=' * 70}")

@@ -28,6 +28,15 @@ class EpochTrace:
     cost-model time and runs nothing) it is just microseconds of Python
     overhead, so use ``tokens_per_s``/``generated_tokens`` (0 for
     analytic) to tell the paths apart, not ``wall_s``.
+
+    Continuous-batching epochs (``ContinuousRuntime``) additionally
+    record their segment structure: ``segments`` chunked-decode segments
+    ran this epoch, ``occupancy`` is the occupied-slot fraction during
+    each of them, ``admitted_mid_epoch`` counts admissions at interior
+    segment boundaries (the requests an epoch-boundary protocol would
+    have left queued), and ``finished_rids`` the requests whose
+    generation COMPLETED this epoch (``selected_rids`` holds admissions).
+    All four stay empty/0 under the epoch-boundary runtime.
     """
     epoch: int
     arrived: int
@@ -39,6 +48,10 @@ class EpochTrace:
     counted: bool = True
     quants: Dict[Optional[str], str] = field(default_factory=dict)
     wall_s: float = 0.0
+    segments: int = 0
+    admitted_mid_epoch: int = 0
+    occupancy: List[float] = field(default_factory=list)
+    finished_rids: List[int] = field(default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
@@ -63,6 +76,15 @@ class EpochMetrics:
     leaves_checked: int = 0
     served_by_method: Dict[str, int] = field(default_factory=dict)
     traces: List[EpochTrace] = field(default_factory=list)
+    segments: int = 0             # chunked segments run (continuous path)
+    admitted_mid_epoch: int = 0   # admissions at interior segment
+                                  # boundaries (continuous path; 0 under
+                                  # the epoch-boundary runtime)
+    final_queue_rids: List[int] = field(default_factory=list)
+                                  # requests still queued when the run
+                                  # ended (conservation accounting:
+                                  # arrived == served + dropped + queued
+                                  # for warmup_epochs=0 runs)
 
     @property
     def throughput(self) -> float:
@@ -80,6 +102,13 @@ class EpochMetrics:
     def mean_batch(self) -> float:
         bs = self.batch_sizes
         return sum(bs) / len(bs) if bs else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean occupied-slot fraction across counted continuous-batching
+        segments (0.0 under the epoch-boundary runtime)."""
+        occ = [o for t in self.traces if t.counted for o in t.occupancy]
+        return sum(occ) / len(occ) if occ else 0.0
 
     @property
     def methods_served(self) -> List[str]:

@@ -42,6 +42,17 @@ from repro.core.request import Request
 Env = Union[EdgeEnv, "_multi.MultiLLMEnv"]
 
 
+class InfeasibleDecisionError(RuntimeError):
+    """A scheduling decision failed its policy's own feasibility oracle.
+
+    Raised by the runtime's authoritative re-check (and by executor
+    capacity clamping) when ``policy.validate`` rejects what
+    ``policy.schedule`` produced — i.e. the scheduler cheated its own
+    contract.  A dedicated exception rather than a bare ``assert`` so the
+    control-plane contract survives ``python -O``.
+    """
+
+
 @dataclass
 class Decision:
     """One epoch's scheduling outcome: per-model batches + per-model

@@ -1,8 +1,9 @@
 """User inference requests  <s_i, n_i, tau_i, a_i>  (paper §II)."""
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -58,3 +59,28 @@ class RequestGenerator:
                 arrival=float(t)))
             self._next_id += 1
         return out
+
+
+@dataclass
+class ReplayGenerator:
+    """Replays a FROZEN arrival stream through the ``within`` interface.
+
+    Lets two runtimes that slice time differently (the epoch-boundary
+    loop queries whole epochs, the continuous loop queries segment
+    windows) see the IDENTICAL traffic realization — the like-for-like
+    requirement of the continuous-vs-epoch comparison.  Each ``within``
+    call returns fresh copies, so runs never share mutable Request state
+    (``t_w``/``model_id``).
+    """
+    requests: Sequence[Request]
+
+    @classmethod
+    def poisson(cls, rate: float, horizon: float, seed: int = 0,
+                **kw) -> "ReplayGenerator":
+        """Freeze one Poisson stream over ``[0, horizon)``."""
+        gen = RequestGenerator(rate=rate, seed=seed, **kw)
+        return cls(requests=gen.within(0.0, horizon))
+
+    def within(self, t0: float, t1: float) -> list:
+        return [dataclasses.replace(r) for r in self.requests
+                if t0 <= r.arrival < t1]

@@ -3,15 +3,20 @@
 ``ServingEngine`` / ``GenerationResult`` are lazily re-exported so that
 importing the (JAX-free) scheduling runtime does not pull in jax.
 """
-from repro.serving.runtime import (AnalyticExecutor, EngineExecutor,  # noqa: F401
+from repro.serving.runtime import (AnalyticContinuousExecutor,  # noqa: F401
+                                   AnalyticExecutor, ContinuousExecutor,
+                                   ContinuousRuntime,
+                                   EngineContinuousExecutor, EngineExecutor,
                                    EpochRuntime, Executor)
 
-__all__ = ["ServingEngine", "GenerationResult", "EpochRuntime",
-           "Executor", "AnalyticExecutor", "EngineExecutor"]
+__all__ = ["ServingEngine", "GenerationResult", "DecodeState",
+           "EpochRuntime", "ContinuousRuntime", "Executor",
+           "AnalyticExecutor", "EngineExecutor", "ContinuousExecutor",
+           "AnalyticContinuousExecutor", "EngineContinuousExecutor"]
 
 
 def __getattr__(name):
-    if name in ("ServingEngine", "GenerationResult"):
+    if name in ("ServingEngine", "GenerationResult", "DecodeState"):
         from repro.serving import engine
         return getattr(engine, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

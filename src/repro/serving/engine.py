@@ -22,6 +22,16 @@ Static shapes: (batch_capacity, s') for prefill and a KV cache capacity of
 s' + n_max — one compiled executable serves every epoch (TPU-friendly, and
 why the paper's padded cost model maps 1:1 onto this engine).
 
+The fused loop also exists in RESUMABLE form for continuous batching:
+``start_chunked`` prefills a cohort into a device-resident ``DecodeState``,
+``generate_chunked(state, k)`` advances it by at most k tokens per call
+(one jitted while-loop segment, no host transfer), and ``refill_chunked``
+prefills new prompts into slots freed by finished rows of the LIVE cohort
+— splicing their cache rows in without touching still-decoding rows.
+Driven to completion, chunked decode is bit-identical to ``generate`` for
+every chunk size (the equivalence suite in
+tests/test_continuous_engine.py).
+
 Weights can be served quantized: ``quant_bits`` picks the DEFAULT
 precision, and a per-call ``generate(..., quant_bits=...)`` override lets
 the scheduler serve each epoch at the method it decided.  Each requested
@@ -33,6 +43,7 @@ load, see DESIGN.md §3).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional, Sequence
 
@@ -50,6 +61,38 @@ class GenerationResult:
     tokens: np.ndarray          # (B, n_max) generated ids (post-prompt)
     lengths: np.ndarray         # (B,) emitted length per request
     batch: int
+
+
+@dataclass
+class DecodeState:
+    """Device-resident, re-entrant decode state of one batch cohort.
+
+    Produced by ``start_chunked`` and advanced by ``generate_chunked``;
+    everything except ``bits``/``caps_host`` lives on the device, so
+    re-entering costs no transfer.  A state passed to ``generate_chunked``
+    or ``refill_chunked`` is CONSUMED (its buffers may be donated into the
+    compiled segment) — always continue from the returned state.
+
+    ``t`` is the cohort's global decode step: the shared KV-cache write
+    position is ``s_max + t``, bounded by ``n_max`` because every row's
+    cap (including refills, clamped to the remaining headroom) fits inside
+    the cache capacity ``s_max + n_max``.  Rows track their own emission
+    via ``lengths``, so rows admitted mid-cohort emit into their row of
+    ``out`` from 0 regardless of ``t``.
+    """
+    cache: Any                  # KV / recurrent cache, full batch capacity
+    cur: jax.Array              # (B,) next token to emit per row
+    out: jax.Array              # (B, n_max) emitted tokens per row
+    lengths: jax.Array          # (B,) emitted count per row
+    done: jax.Array             # (B,) bool, EOS seen
+    caps: jax.Array             # (B,) per-row output cap (0 = empty slot)
+    t: jax.Array                # scalar i32, cohort decode step
+    bits: int = 0               # weight precision this cohort is served at
+    caps_host: np.ndarray = None  # host mirror of caps (no sync needed)
+
+    @property
+    def batch_capacity(self) -> int:
+        return int(self.caps_host.shape[0])
 
 
 class ServingEngine:
@@ -80,6 +123,15 @@ class ServingEngine:
         donate = (1,) if jax.default_backend() != "cpu" else ()
         self._decode_loop = jax.jit(self._decode_loop_fn,
                                     donate_argnums=donate)
+        # chunked decode: the segment loop consumes the carried state
+        # (cache, cur, out, lengths, done) — argnums 1-5 — and the refill
+        # merge consumes the old cache it splices the new slots into
+        seg_donate = (1, 2, 3, 4, 5) if donate else ()
+        self._decode_chunk = jax.jit(self._decode_chunk_fn,
+                                     donate_argnums=seg_donate)
+        self._refill_merge = jax.jit(self._refill_merge_fn,
+                                     donate_argnums=(0,) if donate else ())
+        self._cache_axes = None              # per-leaf batch axis (lazy)
 
     # -- multi-precision weight cache ---------------------------------------
 
@@ -152,6 +204,90 @@ class ServingEngine:
         _, _, out, lengths, _, _ = jax.lax.while_loop(cond, body, state)
         return out, lengths
 
+    def _decode_chunk_fn(self, params, cache, cur, out, lengths, done,
+                         caps, t, t_end):
+        """One re-entrant SEGMENT of the fused decode loop.
+
+        Identical per-step ops to ``_decode_loop_fn``, but (a) the carried
+        state enters and leaves as arguments so the loop can be resumed,
+        and (b) rows emit at their own ``lengths[i]`` instead of the
+        cohort step ``t`` — equal while every row started at t=0 (which
+        makes chunked decode bit-identical to the single fused loop), and
+        what lets rows admitted mid-cohort by ``refill_chunked`` fill
+        their row of ``out`` from 0.  ``t_end`` bounds this segment;
+        passing it as an operand keeps ONE compiled executable for every
+        chunk size k.
+        """
+        B = cur.shape[0]
+        rows = jnp.arange(B)
+
+        def alive_mask(done, lengths):
+            return (~done) & (lengths < caps)
+
+        def cond(state):
+            _, _, _, lengths, done, t = state
+            return (t < t_end) & jnp.any(alive_mask(done, lengths))
+
+        def body(state):
+            cache, cur, out, lengths, done, t = state
+            alive = alive_mask(done, lengths)
+            idx = jnp.minimum(lengths, self.n_max - 1)
+            out = out.at[rows, idx].set(
+                jnp.where(alive, cur, out[rows, idx]))
+            lengths = lengths + alive.astype(jnp.int32)
+            done = done | ((cur == self.eos_id) & alive)
+            logits, cache = self.model.decode_step(
+                params, cache, cur[:, None], self.s_max + t)
+            cur = jnp.argmax(logits[..., :self.cfg.vocab],
+                             -1).astype(jnp.int32)
+            return cache, cur, out, lengths, done, t + 1
+
+        state = (cache, cur, out, lengths, done, t)
+        return jax.lax.while_loop(cond, body, state)
+
+    def _cache_batch_axes(self):
+        """Per-leaf batch axis of the cache pytree (recurrent families put
+        scan-stacked leading dims before batch), derived structurally by
+        diffing cache shapes at two batch sizes — no family-specific
+        layout knowledge."""
+        if self._cache_axes is None:
+            a = jax.eval_shape(lambda: self.model.init_cache(2,
+                                                             self.cache_len))
+            b = jax.eval_shape(lambda: self.model.init_cache(3,
+                                                             self.cache_len))
+
+            def axis(sa, sb):
+                diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                        if x != y]
+                assert len(diff) == 1, (sa.shape, sb.shape)
+                return diff[0]
+
+            self._cache_axes = jax.tree_util.tree_map(axis, a, b)
+        return self._cache_axes
+
+    def _refill_merge_fn(self, old_cache, new_cache, cur, new_cur, out,
+                         lengths, done, caps, new_caps, refill):
+        """Splice freshly prefilled rows into a live decode state.
+
+        ``refill`` is the (B,) bool slot mask; refilled rows take the new
+        prefill's cache/cur and reset their emission state, live rows are
+        untouched."""
+        axes = self._cache_batch_axes()
+
+        def mix(ax, old, new):
+            m = refill.reshape((1,) * ax + (-1,)
+                               + (1,) * (old.ndim - ax - 1))
+            return jnp.where(m, new, old)
+
+        cache = jax.tree_util.tree_map(
+            lambda ax, o, n: mix(ax, o, n), axes, old_cache, new_cache)
+        cur = jnp.where(refill, new_cur, cur)
+        out = jnp.where(refill[:, None], 0, out)
+        lengths = jnp.where(refill, 0, lengths)
+        done = jnp.where(refill, False, done)
+        caps = jnp.where(refill, new_caps, caps)
+        return cache, cur, out, lengths, done, caps
+
     # -- public API ----------------------------------------------------------
 
     def synth_prompts(self, requests: Sequence, rng: np.random.Generator):
@@ -180,6 +316,9 @@ class ServingEngine:
             else self._canon_bits(quant_bits)
         params = self.params_for(bits)
         self.precisions_served.add(bits)
+        return (params, bits) + self._pad_and_ship(prompts, n_tokens)
+
+    def _pad_and_ship(self, prompts, n_tokens):
         B = self.batch_capacity
         nb = len(prompts)
         assert nb <= B, (nb, B)
@@ -189,6 +328,11 @@ class ServingEngine:
         caps[nb:] = 0
 
         tokens, caps_j = jax.device_put((self.pad_prompts(prompts), caps))
+        return self._as_batch(tokens), caps_j, caps, nb
+
+    def _as_batch(self, tokens):
+        """Wrap device-resident prompt tokens as a model input batch."""
+        B = self.batch_capacity
         batch = {"tokens": tokens}
         if self.cfg.family == "vlm":
             batch["patch_embeds"] = jnp.zeros(
@@ -198,7 +342,7 @@ class ServingEngine:
             batch["audio_embeds"] = jnp.zeros(
                 (B, self.cfg.encdec.n_audio_frames, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
-        return params, batch, caps_j, caps, nb
+        return batch
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  n_tokens: Optional[Sequence[int]] = None,
@@ -213,8 +357,8 @@ class ServingEngine:
         token decision (sampling, EOS, caps) stays on device inside
         ``_decode_loop_fn``.
         """
-        params, batch, caps_j, _, nb = self._prepare(prompts, n_tokens,
-                                                     quant_bits)
+        params, _, batch, caps_j, _, nb = self._prepare(prompts, n_tokens,
+                                                        quant_bits)
         cur, cache = self._prefill(params, batch)
         out_j, lengths_j = self._decode_loop(params, cache, cur, caps_j)
         out, lengths = jax.device_get((out_j, lengths_j))
@@ -229,8 +373,8 @@ class ServingEngine:
         """The legacy host-driven decode loop, kept as the interpret-style
         oracle: one blocking device→host transfer PER TOKEN.  The fused
         path must match it bit for bit (see tests/test_serving.py)."""
-        params, batch, _, caps, nb = self._prepare(prompts, n_tokens,
-                                                   quant_bits)
+        params, _, batch, _, caps, nb = self._prepare(prompts, n_tokens,
+                                                      quant_bits)
         B = self.batch_capacity
         cur_j, cache = self._prefill(params, batch)
         cur = np.asarray(jax.device_get(cur_j), np.int32)
@@ -252,5 +396,124 @@ class ServingEngine:
             cur = np.asarray(
                 jax.device_get(
                     jnp.argmax(logits[..., :self.cfg.vocab], -1)), np.int32)
+        return GenerationResult(tokens=out[:nb], lengths=lengths[:nb],
+                                batch=nb)
+
+    # -- chunked (re-entrant) decode: the continuous-batching data plane ----
+
+    def start_chunked(self, prompts: Sequence[Sequence[int]],
+                      n_tokens: Optional[Sequence[int]] = None,
+                      quant_bits: Optional[int] = None) -> DecodeState:
+        """Prefill a new cohort and return its device-resident decode
+        state (ONE host→device transfer; decoding hasn't started).
+        Prompts occupy slots ``0..len(prompts)-1``; the remaining slots
+        are empty (cap 0) and refillable."""
+        params, bits, batch, caps_j, caps, _ = self._prepare(
+            prompts, n_tokens, quant_bits)
+        cur, cache = self._prefill(params, batch)
+        B = self.batch_capacity
+        return DecodeState(
+            cache=cache, cur=cur,
+            out=jnp.zeros((B, self.n_max), jnp.int32),
+            lengths=jnp.zeros((B,), jnp.int32),
+            done=jnp.zeros((B,), bool),
+            caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps)
+
+    def generate_chunked(self, state: DecodeState, k: int) -> DecodeState:
+        """Advance a cohort by AT MOST ``k`` decode steps (one jitted
+        re-entrant while-loop segment, no host transfer) and return the
+        re-entrant state.  The input state is consumed (donated on
+        backends that support it).  Driven to completion this is
+        bit-identical to the single fused loop for any k (see
+        tests/test_continuous_engine.py)."""
+        params = self.params_for(state.bits)
+        t_end = jnp.minimum(state.t + jnp.int32(k), jnp.int32(self.n_max))
+        cache, cur, out, lengths, done, t = self._decode_chunk(
+            params, state.cache, state.cur, state.out, state.lengths,
+            state.done, state.caps, state.t, t_end)
+        return dataclasses.replace(state, cache=cache, cur=cur, out=out,
+                                   lengths=lengths, done=done, t=t)
+
+    def poll_chunked(self, state: DecodeState, with_tokens: bool = True):
+        """Read a cohort's progress back to the host: ONE device→host
+        transfer returning ``(out, lengths, done, t)`` as numpy + int.
+
+        ``with_tokens=False`` skips the (B, n_max) token buffer — the
+        per-segment hot path (``EngineContinuousExecutor``) only needs
+        the few-hundred-byte ``(lengths, done, t)`` occupancy view, and
+        at production shapes ``out`` is the dominant transfer; ``out``
+        comes back as None."""
+        if not with_tokens:
+            lengths, done, t = jax.device_get(
+                (state.lengths, state.done, state.t))
+            return None, lengths, done, int(t)
+        out, lengths, done, t = jax.device_get(
+            (state.out, state.lengths, state.done, state.t))
+        return out, lengths, done, int(t)
+
+    def exhausted(self, lengths, done, caps_host, t) -> bool:
+        """True when no row of a polled cohort can emit again."""
+        return t >= self.n_max or \
+            not bool(np.any(~done & (lengths < caps_host)))
+
+    def headroom(self, t: int) -> int:
+        """Output tokens a row admitted at cohort step ``t`` can still
+        emit before the shared cache position hits capacity."""
+        return max(0, self.n_max - t)
+
+    def refill_chunked(self, state: DecodeState, slots: Sequence[int],
+                       prompts: Sequence[Sequence[int]],
+                       n_tokens: Sequence[int], t_now: int) -> DecodeState:
+        """Prefill new prompts into freed slots of a LIVE cohort.
+
+        The new prompts are padded into their slot rows, prefilled as one
+        full-capacity batch (positions ``[0, s_max)`` — one device_put +
+        one compiled prefill), and spliced into the resident cache with
+        ``_refill_merge`` so live rows keep decoding untouched.  A
+        refilled row's cap is clamped to ``headroom(t_now)`` so its cache
+        writes stay inside ``s_max + n_max``; callers gate admission on
+        that headroom.  Cache slots between a refilled row's prompt and
+        the cohort's current position hold zero K/V — junk attention
+        positions of the same class as the engine's padded prompts (the
+        paper's s' padding); recurrent-state families have no such gap.
+        """
+        B = self.batch_capacity
+        params = self.params_for(state.bits)
+        toks = np.zeros((B, self.s_max), np.int32)
+        new_caps = np.zeros((B,), np.int32)
+        refill = np.zeros((B,), bool)
+        cap_max = min(self.n_max, self.headroom(t_now))
+        for slot, p, n in zip(slots, prompts, n_tokens):
+            p = list(p)[-self.s_max:]
+            if p:
+                toks[slot, -len(p):] = p
+            new_caps[slot] = min(int(n), cap_max)
+            refill[slot] = True
+        toks_j, caps_j, refill_j = jax.device_put((toks, new_caps, refill))
+        new_cur, new_cache = self._prefill(params, self._as_batch(toks_j))
+        cache, cur, out, lengths, done, caps = self._refill_merge(
+            state.cache, new_cache, state.cur, new_cur, state.out,
+            state.lengths, state.done, state.caps, caps_j, refill_j)
+        caps_host = np.where(refill, new_caps, state.caps_host)
+        return dataclasses.replace(state, cache=cache, cur=cur, out=out,
+                                   lengths=lengths, done=done, caps=caps,
+                                   caps_host=caps_host)
+
+    def generate_via_chunks(self, prompts: Sequence[Sequence[int]],
+                            n_tokens: Optional[Sequence[int]] = None,
+                            k: Optional[int] = None,
+                            quant_bits: Optional[int] = None
+                            ) -> GenerationResult:
+        """Drive ``start_chunked`` + ``generate_chunked`` segments to
+        completion — the equivalence harness against ``generate`` /
+        ``generate_reference`` (one device→host poll per segment)."""
+        k = self.n_max if k is None else k
+        state = self.start_chunked(prompts, n_tokens, quant_bits)
+        while True:
+            state = self.generate_chunked(state, k)
+            out, lengths, done, t = self.poll_chunked(state)
+            if self.exhausted(lengths, done, state.caps_host, t):
+                break
+        nb = len(prompts)
         return GenerationResult(tokens=out[:nb], lengths=lengths[:nb],
                                 batch=nb)

@@ -26,18 +26,27 @@ that is the real data plane's measured decode throughput, since
 ``ServingEngine.generate`` blocks on its single device→host transfer.  (The historical
 ``simulate`` / ``serve_epochs`` / ``sweep`` shims are gone; drive this
 class directly.)
+
+``ContinuousRuntime`` is the iteration-level sibling: the same queue
+lifecycle, but the data plane (a ``ContinuousExecutor``) runs chunked
+decode segments and ADMITS queued requests at every segment boundary —
+each slot refill gated by ``policy.validate()`` on the joint
+resident-plus-candidate batch, so the paper's P1 constraints still hold
+for everything on the device.  See DESIGN.md §2.1.
 """
 from __future__ import annotations
 
+import math
 import time
-from typing import Callable, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.environment import EdgeEnv
 from repro.core.metrics import EpochMetrics, EpochTrace
 from repro.core.multi import MultiLLMEnv
-from repro.core.policy import Decision, SchedulerPolicy, as_policy
+from repro.core.policy import (Decision, InfeasibleDecisionError,
+                               SchedulerPolicy, as_policy)
 from repro.core.request import Request, RequestGenerator
 
 Env = Union[EdgeEnv, MultiLLMEnv]
@@ -125,8 +134,10 @@ class EngineExecutor(Executor):
                            quants=decision.quants)
         # Feasibility is monotone under request removal for every shipped
         # policy, but the oracle is the contract — re-check, don't assume.
-        assert policy.validate(env, clamped), \
-            f"{policy.spec}: capacity-clamped batch failed its own oracle"
+        if not policy.validate(env, clamped):
+            raise InfeasibleDecisionError(
+                f"{policy.spec}: capacity-clamped batch failed its own "
+                f"oracle")
         return clamped, spilled
 
     def execute(self, env: Env, decision: Decision) -> int:
@@ -168,6 +179,35 @@ class EpochRuntime:
             return self.env.env_for(r)
         return self.env
 
+    @staticmethod
+    def _resolve_gen(rate: Optional[float], seed: int,
+                     gen: Optional[RequestGenerator]) -> RequestGenerator:
+        """The ONE default workload (paper §IV marginals) — shared by the
+        epoch and continuous loops so their traffic stays comparable."""
+        if gen is not None:
+            return gen
+        if rate is None:
+            raise ValueError("provide either rate= or gen=")
+        return RequestGenerator(rate=rate, seed=seed,
+                                lengths=(128, 256, 512))
+
+    def _age_and_drop(self, queue: List[Request], now: float
+                      ) -> Tuple[List[Request], int]:
+        """Age every queued request to ``now`` and drop the hopeless (or
+        untargeted) ones — the ONE copy of the viability bookkeeping,
+        shared by the epoch and continuous loops so their queue
+        trajectories cannot drift."""
+        viable: List[Request] = []
+        dropped = 0
+        for r in queue:
+            r.t_w = now - r.arrival
+            env_r = self._env_for(r)
+            if env_r is not None and still_viable(env_r, r, now):
+                viable.append(r)
+            else:
+                dropped += 1
+        return viable, dropped
+
     def run(self, rate: Optional[float] = None, n_epochs: int = 30,
             seed: int = 0, gen: Optional[RequestGenerator] = None,
             warmup_epochs: int = 1,
@@ -180,11 +220,7 @@ class EpochRuntime:
         aggregate metrics (queue fill-up transient).  ``tag_arrivals``
         lets multi-LLM workloads assign each arrival a ``model_id``.
         """
-        if gen is None:
-            if rate is None:
-                raise ValueError("provide either rate= or gen=")
-            gen = RequestGenerator(rate=rate, seed=seed,
-                                   lengths=(128, 256, 512))
+        gen = self._resolve_gen(rate, seed, gen)
         T_E = self.T_E
         m = EpochMetrics(n_epochs=n_epochs, T_E=T_E)
         queue: List[Request] = []
@@ -201,26 +237,18 @@ class EpochRuntime:
             queue.extend(arrivals)
 
             # age the queue; drop hopeless (or untargeted) requests
-            viable: List[Request] = []
-            n_dropped = 0
-            for r in queue:
-                r.t_w = t0 - r.arrival
-                env_r = self._env_for(r)
-                if env_r is not None and still_viable(env_r, r, t0):
-                    viable.append(r)
-                else:
-                    n_dropped += 1
-                    if counting:
-                        m.dropped += 1
-            queue = viable
+            queue, n_dropped = self._age_and_drop(queue, t0)
+            if counting:
+                m.dropped += n_dropped
 
             decision = self.policy.schedule(self.env, queue)
             decision, spilled = self.executor.admit(self.env, self.policy,
                                                     decision)
             # authoritative re-check against the policy's own oracle
             # (schedulers must not cheat)
-            assert self.policy.validate(self.env, decision), \
-                f"{self.policy.spec} returned an infeasible batch"
+            if not self.policy.validate(self.env, decision):
+                raise InfeasibleDecisionError(
+                    f"{self.policy.spec} returned an infeasible batch")
             # real executors block on the result (ServingEngine.generate
             # device_gets), so this wall-clock is the data plane's t_A+t_I
             t_exec = time.perf_counter()
@@ -253,4 +281,382 @@ class EpochRuntime:
 
             chosen = {r.rid for r in sel}
             queue = [r for r in queue if r.rid not in chosen]
+        m.final_queue_rids = [r.rid for r in queue]
+        return m
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: chunked decode segments + mid-epoch admission
+# ---------------------------------------------------------------------------
+
+
+class ContinuousExecutor:
+    """Slot-structured data plane behind ``ContinuousRuntime``.
+
+    One POOL of ``capacity`` request slots per hosted model.  Resident
+    requests advance ``k`` tokens per ``step`` (one chunked decode
+    segment); rows that finish free their slot, and freed slots are
+    refillable between segments — the iteration-level batching the
+    epoch protocol cannot express.  Subclasses implement the token
+    mechanics; this base owns the slot bookkeeping shared by both.
+    """
+
+    def __init__(self):
+        self._pools: Dict[Optional[str], dict] = {}
+
+    # -- pool construction ---------------------------------------------------
+
+    def bind(self, env: Env) -> None:
+        """(Re)build one empty pool per hosted model of ``env``."""
+        mids = list(env.envs) if isinstance(env, MultiLLMEnv) else [None]
+        self._pools = {mid: self._make_pool(mid) for mid in mids}
+
+    def _make_pool(self, mid: Optional[str]) -> dict:
+        return {"capacity": self._capacity(mid), "resident": {},
+                "pending": []}
+
+    def _capacity(self, mid: Optional[str]) -> int:
+        raise NotImplementedError
+
+    # -- slot bookkeeping (shared) -------------------------------------------
+
+    def pool_ids(self) -> List[Optional[str]]:
+        return list(self._pools)
+
+    def resident(self, mid: Optional[str]) -> List[Request]:
+        """Requests currently occupying slots (incl. pending refills) —
+        the batch an admission candidate must stay jointly feasible
+        with."""
+        pool = self._pools[mid]
+        return list(pool["resident"].values()) \
+            + [r for _, r in pool["pending"]]
+
+    def free_slots(self, mid: Optional[str]) -> int:
+        pool = self._pools[mid]
+        return pool["capacity"] - len(pool["resident"]) \
+            - len(pool["pending"])
+
+    def accepts(self, mid: Optional[str], r: Request) -> bool:
+        """Slot-structure gate only (P1 feasibility is the runtime's
+        job, via ``policy.validate``)."""
+        return mid in self._pools and self.free_slots(mid) > 0
+
+    def place(self, mid: Optional[str], r: Request) -> None:
+        """Claim the lowest free slot for an admitted request; the refill
+        executes at the start of the next ``step`` (engines batch all of
+        a boundary's admissions into ONE prefill)."""
+        pool = self._pools[mid]
+        taken = set(pool["resident"]) | {s for s, _ in pool["pending"]}
+        slot = min(s for s in range(pool["capacity"]) if s not in taken)
+        pool["pending"].append((slot, r))
+
+    def idle(self) -> bool:
+        return all(not p["resident"] and not p["pending"]
+                   for p in self._pools.values())
+
+    def method_name(self, env_r: EdgeEnv) -> str:
+        """Label for ``served_by_method`` accounting: the precision this
+        executor actually serves with (the env's deployed method unless
+        a subclass overrides it)."""
+        return env_r.quant.name
+
+    # -- token mechanics (subclass contract) ---------------------------------
+
+    def tokens_per_epoch(self) -> int:
+        """Decode steps one epoch is provisioned for (sets the default
+        segment grid: ``segments_per_epoch = ceil(tokens_per_epoch/k)``,
+        so chunk size k = tokens_per_epoch reduces to one admission point
+        per epoch — the epoch protocol's grid)."""
+        raise NotImplementedError
+
+    def step(self, env: Env, k: int
+             ) -> Tuple[List[Tuple[Optional[str], Request, int]], float]:
+        """Apply pending refills, advance every pool by at most ``k``
+        tokens, and return (finished rows as ``(model_id, request,
+        generated_tokens)``, mean occupied-slot fraction during the
+        segment)."""
+        raise NotImplementedError
+
+
+class AnalyticContinuousExecutor(ContinuousExecutor):
+    """Cost-model-time continuous data plane: nothing runs, resident
+    requests emit ``k`` tokens per segment and finish after ``n_i`` —
+    the deterministic vehicle for the conservation property tests (like
+    ``AnalyticExecutor``, it reports 0 generated tokens)."""
+
+    def __init__(self, capacity: Union[int, Dict[Optional[str], int]] = 8,
+                 tokens_per_epoch_: int = 512):
+        super().__init__()
+        self._cap = capacity
+        self._tokens_per_epoch = tokens_per_epoch_
+
+    def _make_pool(self, mid):
+        pool = super()._make_pool(mid)
+        pool["remaining"] = {}          # slot -> output tokens left
+        return pool
+
+    def _capacity(self, mid: Optional[str]) -> int:
+        return self._cap[mid] if isinstance(self._cap, dict) else self._cap
+
+    def tokens_per_epoch(self) -> int:
+        return self._tokens_per_epoch
+
+    def step(self, env, k):
+        finished, occupied, capacity = [], 0, 0
+        for mid, pool in self._pools.items():
+            for slot, r in pool["pending"]:
+                pool["resident"][slot] = r
+                pool["remaining"][slot] = r.n
+            pool["pending"].clear()
+            occupied += len(pool["resident"])
+            capacity += pool["capacity"]
+            for slot, r in list(pool["resident"].items()):
+                pool["remaining"][slot] -= k
+                if pool["remaining"][slot] <= 0:
+                    finished.append((mid, r, 0))
+                    del pool["resident"][slot]
+                    del pool["remaining"][slot]
+        return finished, occupied / capacity if capacity else 0.0
+
+
+class EngineContinuousExecutor(ContinuousExecutor):
+    """Real continuous data plane: each pool is a ``ServingEngine``
+    COHORT driven through the chunked decode API.
+
+    Admissions buffered by ``place`` become ONE prefill at the next
+    ``step`` — ``start_chunked`` for an empty pool, ``refill_chunked``
+    spliced into the live cohort otherwise.  Each segment is one jitted
+    ``generate_chunked`` call plus one small ``poll_chunked`` readback
+    (the per-segment host sync that buys the admission point).  A row
+    finishes when EOS fires or its cap fills; when a cohort drains (or
+    its shared cache position exhausts at ``n_max``) the pool resets and
+    the next admission starts a fresh cohort.  ``accepts`` additionally
+    requires the cohort headroom to cover a candidate's full clamped
+    service ``min(n_i, n_max)`` so refills are never silently truncated.
+
+    ``engines`` is one engine or a ``{model_id: ServingEngine}`` dict
+    (mirroring ``EngineExecutor``); ``quant_bits`` optionally pins the
+    served weight precision per cohort (None = engine default) — an
+    engine-level override, not a scheduled method, so
+    ``served_by_method`` records it as ``"weight_bits=<b>"`` rather than
+    borrowing a METHODS name whose beta/accuracy terms were never
+    applied.
+    """
+
+    def __init__(self, engines, rng: Optional[np.random.Generator] = None,
+                 seed: int = 0, quant_bits: Optional[int] = None):
+        super().__init__()
+        if not isinstance(engines, dict):
+            engines = {None: engines}
+        self.engines = engines
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+        self.quant_bits = quant_bits
+
+    def _make_pool(self, mid):
+        pool = super()._make_pool(mid)
+        pool.update(engine=self.engines[mid], state=None, t=0)
+        return pool
+
+    def _capacity(self, mid) -> int:
+        return self.engines[mid].batch_capacity
+
+    def tokens_per_epoch(self) -> int:
+        return max(e.n_max for e in self.engines.values())
+
+    def method_name(self, env_r: EdgeEnv) -> str:
+        if self.quant_bits is None:
+            return env_r.quant.name
+        return f"weight_bits={self.quant_bits}"
+
+    def accepts(self, mid, r) -> bool:
+        if not super().accepts(mid, r):
+            return False
+        pool = self._pools[mid]
+        if pool["state"] is None:
+            return True
+        eng = pool["engine"]
+        return eng.headroom(pool["t"]) >= min(r.n, eng.n_max)
+
+    def step(self, env, k):
+        finished, occupied, capacity = [], 0, 0
+        for mid, pool in self._pools.items():
+            eng = pool["engine"]
+            if pool["pending"]:
+                slots = [s for s, _ in pool["pending"]]
+                reqs = [r for _, r in pool["pending"]]
+                prompts, caps = eng.synth_prompts(reqs, self.rng)
+                if pool["state"] is None:
+                    pool["state"] = eng.start_chunked(
+                        prompts, caps, quant_bits=self.quant_bits)
+                    pool["t"] = 0
+                else:
+                    pool["state"] = eng.refill_chunked(
+                        pool["state"], slots, prompts, caps,
+                        t_now=pool["t"])
+                pool["resident"].update(zip(slots, reqs))
+                pool["pending"].clear()
+            occupied += len(pool["resident"])
+            capacity += pool["capacity"]
+            if pool["state"] is None:
+                continue
+            pool["state"] = eng.generate_chunked(pool["state"], k)
+            # light poll: the hot path only needs the occupancy view,
+            # not the (B, n_max) token buffer
+            _, lengths, done, t = eng.poll_chunked(pool["state"],
+                                                   with_tokens=False)
+            pool["t"] = t
+            caps_h = pool["state"].caps_host
+            for slot, r in list(pool["resident"].items()):
+                if done[slot] or lengths[slot] >= caps_h[slot]:
+                    finished.append((mid, r, int(lengths[slot])))
+                    del pool["resident"][slot]
+            if not pool["resident"]:
+                pool["state"], pool["t"] = None, 0   # cohort drained
+        return finished, occupied / capacity if capacity else 0.0
+
+
+class ContinuousRuntime(EpochRuntime):
+    """Continuous-batching sibling of the epoch loop (DESIGN.md §2.1).
+
+    Same arrival / aging / viability-drop bookkeeping on the same epoch
+    grid, but each epoch is split into ``segments_per_epoch`` chunked
+    decode segments and ADMISSION happens at every segment boundary:
+    FIFO first-fit over the queue, each candidate gated by
+    ``policy.validate()`` on (resident ∪ candidate) — the paper's P1
+    feasibility oracle reused as the admission-control contract, so no
+    slot refill can violate the constraint set the scheduler enforces at
+    epoch boundaries.  Resident requests keep their admission-time
+    waits; ``schedule()`` is never called — continuous batching replaces
+    the batch-selection problem with per-request admission control.
+
+    Requests are counted served when their generation FINISHES (the
+    epoch runtime counts at selection; with its execute-within-the-epoch
+    contract the two agree on epoch attribution).  After the last epoch
+    the resident cohorts DRAIN to completion (bounded by one cohort
+    span), attributed to the final epoch — so for ``warmup_epochs=0``
+    conservation holds exactly: ``arrived == served + dropped +
+    len(final_queue_rids)``.
+    """
+
+    def __init__(self, env: Env, policy: Union[str, SchedulerPolicy],
+                 executor: ContinuousExecutor, k: int = 4,
+                 segments_per_epoch: Optional[int] = None):
+        super().__init__(env, policy)
+        self.executor = self.cexec = executor
+        self.k = int(k)
+        self.segments_per_epoch = segments_per_epoch or max(
+            1, math.ceil(executor.tokens_per_epoch() / self.k))
+
+    # -- admission: validate()-gated first-fit -------------------------------
+
+    def _try_admit(self, queue: List[Request]) -> List[Request]:
+        """Admit queued requests into free slots, FIFO first-fit, each
+        gated by the policy's own feasibility oracle on the joint
+        resident-plus-candidate batch.  The resident view is built once
+        per boundary and updated incrementally as candidates land."""
+        admitted: List[Request] = []
+        batches = {m: self.cexec.resident(m) for m in self.cexec.pool_ids()}
+        for r in queue:
+            mid = r.model_id
+            if mid not in batches or not self.cexec.accepts(mid, r):
+                continue
+            batches[mid].append(r)
+            if self.policy.validate(self.env, Decision(batches=batches)):
+                self.cexec.place(mid, r)
+                admitted.append(r)
+            else:
+                batches[mid].pop()
+        return admitted
+
+    def _record_finished(self, finished: Sequence, counting: bool,
+                         m: EpochMetrics, trace: EpochTrace) -> None:
+        for mid, r, tokens in finished:
+            trace.finished_rids.append(r.rid)
+            trace.generated_tokens += tokens
+            if counting:
+                m.served += 1
+                m.generated_tokens += tokens
+                name = self.cexec.method_name(self._env_for(r))
+                m.served_by_method[name] = \
+                    m.served_by_method.get(name, 0) + 1
+
+    def run(self, rate: Optional[float] = None, n_epochs: int = 30,
+            seed: int = 0, gen: Optional[RequestGenerator] = None,
+            warmup_epochs: int = 1,
+            tag_arrivals: Optional[Callable[[List[Request]],
+                                            List[Request]]] = None
+            ) -> EpochMetrics:
+        gen = self._resolve_gen(rate, seed, gen)
+        T_E = self.T_E
+        n_seg = self.segments_per_epoch
+        dt = T_E / n_seg
+        self.cexec.bind(self.env)
+        m = EpochMetrics(n_epochs=n_epochs, T_E=T_E)
+        queue: List[Request] = []
+        trace: Optional[EpochTrace] = None
+
+        for e in range(n_epochs + warmup_epochs):
+            counting = e >= warmup_epochs
+            trace = EpochTrace(epoch=e, arrived=0, dropped=0,
+                               selected_rids=[], counted=counting)
+            for j in range(n_seg):
+                t_seg = e * T_E + j * dt
+                # requests that arrived during the previous SEGMENT join
+                # here — the epoch loop's boundary rule, at segment grain
+                arrivals = gen.within(t_seg - dt, t_seg) if (e or j) else []
+                if tag_arrivals is not None:
+                    arrivals = tag_arrivals(arrivals)
+                trace.arrived += len(arrivals)
+                if counting:
+                    m.arrived += len(arrivals)
+                queue.extend(arrivals)
+
+                queue, n_dropped = self._age_and_drop(queue, t_seg)
+                trace.dropped += n_dropped
+                if counting:
+                    m.dropped += n_dropped
+                admitted = self._try_admit(queue)
+                if admitted:
+                    got = {r.rid for r in admitted}
+                    queue = [r for r in queue if r.rid not in got]
+                    trace.selected_rids.extend(r.rid for r in admitted)
+                    if j > 0:
+                        trace.admitted_mid_epoch += len(admitted)
+                        if counting:
+                            m.admitted_mid_epoch += len(admitted)
+
+                t0 = time.perf_counter()
+                finished, occ = self.cexec.step(self.env, self.k)
+                trace.wall_s += time.perf_counter() - t0
+                trace.segments += 1
+                trace.occupancy.append(occ)
+                if counting:
+                    m.segments += 1
+                self._record_finished(finished, counting, m, trace)
+
+            if counting:
+                m.batch_sizes.append(len(trace.selected_rids))
+                m.wall_s += trace.wall_s
+            m.traces.append(trace)
+
+        # drain resident cohorts (bounded: every step makes progress and
+        # nothing new is admitted), attributed to the final epoch
+        counting = n_epochs > 0
+        for _ in range(100_000):
+            if self.cexec.idle():
+                break
+            t0 = time.perf_counter()
+            finished, occ = self.cexec.step(self.env, self.k)
+            wall = time.perf_counter() - t0
+            trace.wall_s += wall
+            trace.segments += 1
+            trace.occupancy.append(occ)
+            if counting:
+                m.segments += 1
+                m.wall_s += wall
+            self._record_finished(finished, counting, m, trace)
+        else:
+            raise RuntimeError("continuous drain did not converge")
+
+        m.final_queue_rids = [r.rid for r in queue]
         return m

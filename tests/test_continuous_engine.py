@@ -1,0 +1,231 @@
+"""Chunked (re-entrant) decode: the continuous-batching data plane.
+
+Contract: ``start_chunked`` + ``generate_chunked(state, k)`` driven to
+completion is BIT-IDENTICAL to the single fused loop (``generate``) and
+to the legacy host loop (``generate_reference``) for every chunk size k —
+including every edge case the fused loop is tested against (cap=0 rows,
+immediate EOS, padding-only rows, empty batch, quant bits 0/8/4).  On top
+of the frozen-batch contract, ``refill_chunked`` splices new prompts into
+slots freed mid-cohort without perturbing live rows.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.serving.engine import ServingEngine
+
+CHUNKS = [1, 3, 8]          # 8 == n_max of the module engine (k = max)
+
+
+def assert_same_generation(a, b):
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    np.testing.assert_array_equal(a.lengths, b.lengths)
+    assert a.batch == b.batch
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced_cfg("bloom-3b")
+    return ServingEngine(cfg, batch_capacity=4, s_max=32, n_max=8)
+
+
+# -- equivalence: chunked == fused == reference, for every k -----------------
+
+
+@pytest.mark.parametrize("k", CHUNKS)
+def test_chunked_matches_fused_and_reference_edge_cases(engine, k):
+    """cap=0 rows, pad-token prompts and padding-only rows decode
+    bit-identically through chunked segments of any size."""
+    prompts = [[1, 2, 3], [0, 0], [7]]       # slot 4 stays padding-only
+    caps = [5, 0, 8]
+    chunked = engine.generate_via_chunks(prompts, n_tokens=caps, k=k)
+    assert_same_generation(chunked, engine.generate(prompts, n_tokens=caps))
+    assert_same_generation(chunked,
+                           engine.generate_reference(prompts, n_tokens=caps))
+    assert chunked.lengths[1] == 0           # cap=0 row emits nothing
+    assert np.all(chunked.tokens[1] == 0)
+
+
+@pytest.mark.parametrize("k", CHUNKS)
+def test_chunked_matches_fused_empty_batch(engine, k):
+    a = engine.generate_via_chunks([], n_tokens=[], k=k)
+    b = engine.generate([], n_tokens=[])
+    assert_same_generation(a, b)
+    assert a.tokens.shape == (0, engine.n_max)
+
+
+@pytest.mark.parametrize("bits", [0, 8, 4])
+@pytest.mark.parametrize("k", [1, 3])
+def test_chunked_matches_reference_all_precisions(engine, bits, k):
+    prompts = [[5, 6, 7], [1, 2], [9, 9, 9, 9]]
+    a = engine.generate_via_chunks(prompts, n_tokens=[8, 3, 6], k=k,
+                                   quant_bits=bits)
+    b = engine.generate_reference(prompts, n_tokens=[8, 3, 6],
+                                  quant_bits=bits)
+    assert_same_generation(a, b)
+    assert a.lengths.max() >= 1
+
+
+@pytest.mark.parametrize("k", CHUNKS)
+def test_chunked_immediate_eos(engine, k):
+    """A row whose FIRST sampled token is EOS emits exactly one token
+    through any segmentation."""
+    ref = engine.generate_reference([[9, 8, 7]], n_tokens=[6])
+    tok0 = int(ref.tokens[0, 0])
+    eng2 = ServingEngine(engine.cfg, params=engine._raw_params,
+                         batch_capacity=4, s_max=32, n_max=8, eos_id=tok0)
+    a = eng2.generate_via_chunks([[9, 8, 7]], n_tokens=[6], k=k)
+    assert_same_generation(a, eng2.generate_reference([[9, 8, 7]],
+                                                      n_tokens=[6]))
+    assert a.lengths[0] == 1
+    assert a.tokens[0, 0] == tok0
+
+
+def test_chunked_state_reentry_any_split(engine):
+    """Segments of mixed sizes resume exactly where the cohort left off:
+    2+3+max == one max-size segment."""
+    prompts = [[1, 2, 3], [4, 5, 6]]
+    caps = [8, 8]
+    one = engine.generate_chunked(
+        engine.start_chunked(prompts, caps), engine.n_max)
+    mixed = engine.start_chunked(prompts, caps)
+    for k in (2, 3, engine.n_max):
+        mixed = engine.generate_chunked(mixed, k)
+    a, b = engine.poll_chunked(one), engine.poll_chunked(mixed)
+    np.testing.assert_array_equal(a[0], b[0])        # out
+    np.testing.assert_array_equal(a[1], b[1])        # lengths
+    np.testing.assert_array_equal(a[2], b[2])        # done
+    assert a[3] == b[3]                              # t
+
+
+def test_chunked_transfer_counts(engine, monkeypatch):
+    """k=max chunked decode costs the SAME two transfers as the fused
+    loop (one device_put at start, one device_get at poll); smaller k
+    pays one poll device_get per segment — the price of the admission
+    point."""
+    counts = {"get": 0, "put": 0}
+    real_get, real_put = jax.device_get, jax.device_put
+
+    def counting_get(x):
+        counts["get"] += 1
+        return real_get(x)
+
+    def counting_put(x):
+        counts["put"] += 1
+        return real_put(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    monkeypatch.setattr(jax, "device_put", counting_put)
+
+    engine.generate_via_chunks([[1, 2, 3], [4, 5, 6]], n_tokens=[5, 5],
+                               k=engine.n_max)
+    assert counts == {"get": 1, "put": 1}
+
+    counts.update(get=0, put=0)
+    res = engine.generate_via_chunks([[1, 2, 3], [4, 5, 6]],
+                                     n_tokens=[5, 5], k=1)
+    assert counts["put"] == 1
+    # one poll per 1-token segment; the last segment's poll observes the
+    # cap-limited exhaustion, so polls == decode steps
+    assert int(res.lengths.max()) == 5          # cap-limited, no early EOS
+    assert counts["get"] == 5
+
+
+def test_poll_without_tokens_skips_the_big_buffer(engine):
+    """The per-segment hot path polls only (lengths, done, t); the
+    (B, n_max) token buffer stays on device until someone asks."""
+    state = engine.start_chunked([[1, 2, 3]], n_tokens=[4])
+    state = engine.generate_chunked(state, 2)
+    out, lengths, done, t = engine.poll_chunked(state, with_tokens=False)
+    assert out is None
+    full, lengths2, done2, t2 = engine.poll_chunked(state)
+    assert full.shape == (engine.batch_capacity, engine.n_max)
+    np.testing.assert_array_equal(lengths, lengths2)
+    np.testing.assert_array_equal(done, done2)
+    assert t == t2
+
+
+# -- slot eviction / refill ---------------------------------------------------
+
+
+def test_refill_leaves_live_rows_untouched(engine):
+    """Refilling a freed slot mid-cohort must not perturb rows that are
+    still decoding: their tokens stay bit-identical to an undisturbed
+    run of the same batch."""
+    prompts = [[1, 2, 3], [4, 5]]
+    undisturbed = engine.generate(prompts, n_tokens=[8, 2])
+
+    state = engine.start_chunked(prompts, n_tokens=[8, 2])
+    state = engine.generate_chunked(state, 3)        # row 1 (cap 2) is done
+    _, lengths, done, t = engine.poll_chunked(state)
+    assert lengths[1] == 2
+    state = engine.refill_chunked(state, [1], [[9, 9, 9]], [4], t_now=t)
+    while True:
+        state = engine.generate_chunked(state, 2)
+        out, lengths, done, t = engine.poll_chunked(state)
+        if engine.exhausted(lengths, done, state.caps_host, t):
+            break
+    np.testing.assert_array_equal(out[0], undisturbed.tokens[0])
+    assert lengths[0] == undisturbed.lengths[0]
+    assert 1 <= lengths[1] <= 4                      # refilled row decoded
+
+
+def test_refill_caps_clamp_to_cohort_headroom(engine):
+    """A row admitted at cohort step t can emit at most n_max - t tokens
+    (its cache writes must fit the static capacity); refill_chunked
+    clamps the cap and caps_host mirrors it."""
+    state = engine.start_chunked([[1, 2, 3]], n_tokens=[8])
+    state = engine.generate_chunked(state, 5)
+    _, _, _, t = engine.poll_chunked(state)
+    assert engine.headroom(t) == engine.n_max - t
+    state = engine.refill_chunked(state, [3], [[7, 7]], [8], t_now=t)
+    assert state.caps_host[3] == engine.n_max - t
+    while True:
+        state = engine.generate_chunked(state, 4)
+        out, lengths, done, t = engine.poll_chunked(state)
+        if engine.exhausted(lengths, done, state.caps_host, t):
+            break
+    assert t <= engine.n_max
+    assert lengths[3] <= state.caps_host[3]
+
+
+def test_refill_recurrent_family_matches_solo_decode():
+    """Recurrent-state families carry no junk-attention positions, so a
+    refilled row must decode bit-identically to serving its prompt
+    alone."""
+    eng = ServingEngine(reduced_cfg("xlstm-1.3b"), batch_capacity=2,
+                        s_max=16, n_max=4)
+    state = eng.start_chunked([[1, 2, 3]], n_tokens=[2])
+    state = eng.generate_chunked(state, 2)
+    _, _, _, t = eng.poll_chunked(state)
+    state = eng.refill_chunked(state, [1], [[7, 8]], [2], t_now=t)
+    state = eng.generate_chunked(state, eng.n_max)
+    out, lengths, _, _ = eng.poll_chunked(state)
+    solo = eng.generate([[7, 8]], n_tokens=[2])
+    np.testing.assert_array_equal(out[1, :2], solo.tokens[0, :2])
+    assert lengths[1] == solo.lengths[0]
+
+
+def test_cache_batch_axes_derived_per_family():
+    """The refill merge finds each cache leaf's batch axis structurally —
+    the axes tree mirrors the cache tree exactly, with a valid axis per
+    leaf, for attention AND recurrent-state families."""
+    for arch in ("bloom-3b", "xlstm-1.3b", "zamba2-7b"):
+        eng = ServingEngine(reduced_cfg(arch), batch_capacity=2,
+                            s_max=16, n_max=4)
+        axes = eng._cache_batch_axes()
+        shapes = jax.eval_shape(lambda e=eng: e.model.init_cache(
+            2, e.cache_len))
+        assert jax.tree_util.tree_structure(axes) == \
+            jax.tree_util.tree_structure(shapes)
+        for ax, leaf in zip(jax.tree_util.tree_leaves(axes),
+                            jax.tree_util.tree_leaves(shapes)):
+            assert 0 <= ax < len(leaf.shape)
+            assert leaf.shape[ax] == 2        # the batch dim
+    eng_t = ServingEngine(reduced_cfg("bloom-3b"), batch_capacity=2,
+                          s_max=16, n_max=4)
+    assert set(jax.tree_util.tree_leaves(eng_t._cache_batch_axes())) \
+        == {1}                                 # (L, B, W, nkv, dh)

@@ -1,0 +1,282 @@
+"""Continuous-batching runtime: conservation, admission control, and the
+``InfeasibleDecisionError`` contract.
+
+The load-bearing property (hypothesis, over random arrival streams and
+EVERY registered policy spec): the queue lifecycle conserves requests —
+``arrived == served + dropped + len(final_queue)`` — and no rid is ever
+served twice, for BOTH the epoch-boundary runtime and the continuous
+path.  Deterministic pytest variants cover the same invariant without
+hypothesis installed (CI installs it; see requirements-test.txt).
+"""
+from __future__ import annotations
+
+import types
+
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.environment import paper_env
+from repro.core.multi import MultiLLMEnv
+from repro.core.policy import (Decision, InfeasibleDecisionError,
+                               SchedulerPolicy, available)
+from repro.core.request import ReplayGenerator, RequestGenerator
+from repro.serving.runtime import (AnalyticContinuousExecutor,
+                                   AnalyticExecutor, ContinuousRuntime,
+                                   EngineContinuousExecutor, EngineExecutor,
+                                   EpochRuntime)
+
+ENV = paper_env("bloom-3b", "W8A16")
+MENV = MultiLLMEnv.host({
+    "bloom-3b": paper_env("bloom-3b", "W8A16"),
+    "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+})
+SINGLE_SPECS = sorted(s for s in available() if s != "multi-dftsp")
+
+
+def _tagger(arrivals):
+    for i, r in enumerate(arrivals):
+        r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+    return arrivals
+
+
+def _spec_env(spec):
+    multi = spec.startswith("multi-dftsp")
+    return (MENV if multi else ENV), (_tagger if multi else None)
+
+
+def assert_conserved(m):
+    assert m.arrived == m.served + m.dropped + len(m.final_queue_rids), \
+        (m.arrived, m.served, m.dropped, len(m.final_queue_rids))
+
+
+def served_rids(m):
+    """rids served by either runtime: the epoch loop serves at selection,
+    the continuous loop at completion (finished_rids)."""
+    continuous = any(t.segments for t in m.traces)
+    pick = (lambda t: t.finished_rids) if continuous \
+        else (lambda t: t.selected_rids)
+    return [rid for t in m.traces if t.counted for rid in pick(t)]
+
+
+# -- deterministic conservation (runs without hypothesis) --------------------
+
+
+@pytest.mark.parametrize("spec", available())
+def test_epoch_runtime_conserves_requests(spec):
+    env, tagger = _spec_env(spec)
+    m = EpochRuntime(env, spec, AnalyticExecutor()).run(
+        rate=4, n_epochs=5, seed=7, warmup_epochs=0, tag_arrivals=tagger)
+    assert_conserved(m)
+    rids = served_rids(m)
+    assert len(rids) == len(set(rids)) == m.served
+
+
+@pytest.mark.parametrize("spec", available())
+def test_continuous_runtime_conserves_requests(spec):
+    env, tagger = _spec_env(spec)
+    m = ContinuousRuntime(env, spec, AnalyticContinuousExecutor(capacity=4),
+                          k=64).run(rate=4, n_epochs=5, seed=7,
+                                    warmup_epochs=0, tag_arrivals=tagger)
+    assert_conserved(m)
+    rids = served_rids(m)
+    assert len(rids) == len(set(rids)) == m.served
+    admitted = [rid for t in m.traces for rid in t.selected_rids]
+    assert sorted(admitted) == sorted(rids)      # every admission finishes
+
+
+# -- the hypothesis property over random streams and every policy ------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(spec=st.sampled_from(available()),
+           seed=st.integers(0, 2**16),
+           rate=st.floats(0.5, 5.0),
+           capacity=st.integers(1, 8),
+           k=st.sampled_from([1, 32, 64, 256, 512]))
+    def test_conservation_property_both_runtimes(spec, seed, rate,
+                                                 capacity, k):
+        env, tagger = _spec_env(spec)
+        epoch = EpochRuntime(env, spec, AnalyticExecutor()).run(
+            rate=rate, n_epochs=4, seed=seed, warmup_epochs=0,
+            tag_arrivals=tagger)
+        cont = ContinuousRuntime(
+            env, spec, AnalyticContinuousExecutor(capacity=capacity),
+            k=k).run(rate=rate, n_epochs=4, seed=seed, warmup_epochs=0,
+                     tag_arrivals=tagger)
+        for m in (epoch, cont):
+            assert_conserved(m)
+            rids = served_rids(m)
+            assert len(rids) == len(set(rids)) == m.served
+
+
+# -- continuous structure: segments, occupancy, mid-epoch admission ----------
+
+
+def test_segment_grid_reduces_to_epoch_protocol_at_k_max():
+    ex = AnalyticContinuousExecutor(capacity=4, tokens_per_epoch_=512)
+    assert ContinuousRuntime(ENV, "dftsp", ex, k=512).segments_per_epoch == 1
+    assert ContinuousRuntime(ENV, "dftsp", ex, k=64).segments_per_epoch == 8
+    assert ContinuousRuntime(ENV, "dftsp", ex, k=1000,
+                             ).segments_per_epoch == 1
+
+
+def test_continuous_records_segments_and_occupancy():
+    m = ContinuousRuntime(ENV, "dftsp", AnalyticContinuousExecutor(capacity=2),
+                          k=128).run(rate=5, n_epochs=4, seed=3,
+                                     warmup_epochs=0)
+    for t in m.traces:
+        assert len(t.occupancy) == t.segments
+        assert all(0.0 <= o <= 1.0 for o in t.occupancy)
+    assert m.segments == sum(t.segments for t in m.traces if t.counted)
+    assert 0.0 < m.mean_occupancy <= 1.0
+
+
+def test_mid_epoch_admission_happens_under_backlog():
+    """With a small pool and a hot queue, slots freed by finishing rows
+    are refilled at interior segment boundaries — the capacity the
+    epoch protocol leaves on the table."""
+    m = ContinuousRuntime(ENV, "dftsp", AnalyticContinuousExecutor(capacity=2),
+                          k=128).run(rate=8, n_epochs=4, seed=0,
+                                     warmup_epochs=0)
+    assert m.admitted_mid_epoch > 0
+    assert m.admitted_mid_epoch == sum(t.admitted_mid_epoch
+                                       for t in m.traces if t.counted)
+    # epoch-boundary runs never admit mid-epoch
+    e = EpochRuntime(ENV, "dftsp", AnalyticExecutor()).run(
+        rate=8, n_epochs=4, seed=0, warmup_epochs=0)
+    assert e.admitted_mid_epoch == 0 and e.segments == 0
+
+
+def test_admission_is_gated_by_policy_oracle():
+    """A policy whose oracle rejects everything admits nothing on the
+    continuous path (validate() IS the admission contract)."""
+
+    class RejectAll(SchedulerPolicy):
+        name = "reject-all-stub"
+
+        def schedule(self, env, queue):
+            return Decision.single([])
+
+        def validate(self, env, decision):
+            return not decision.selected
+
+    m = ContinuousRuntime(ENV, RejectAll(),
+                          AnalyticContinuousExecutor(capacity=4),
+                          k=128).run(rate=5, n_epochs=3, seed=0,
+                                     warmup_epochs=0)
+    assert m.served == 0
+    assert_conserved(m)
+
+
+# -- engine-backed continuous path (real data plane) -------------------------
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    from repro.serving.engine import ServingEngine
+    cfg = reduced_cfg("bloom-3b")
+    return ServingEngine(cfg, batch_capacity=4, s_max=16, n_max=8)
+
+
+def test_engine_continuous_end_to_end(small_engine):
+    gen = RequestGenerator(rate=6, seed=0, lengths=(2, 4, 8))
+    m = ContinuousRuntime(ENV, "dftsp",
+                          EngineContinuousExecutor(small_engine, seed=0),
+                          k=2).run(gen=gen, n_epochs=3, seed=0,
+                                   warmup_epochs=0)
+    assert_conserved(m)
+    assert m.served > 0
+    assert m.generated_tokens > 0
+    assert m.wall_s > 0 and m.tokens_per_s > 0
+    rids = served_rids(m)
+    assert len(rids) == len(set(rids)) == m.served
+
+
+def test_engine_continuous_beats_epoch_on_backlogged_queue(small_engine):
+    """The acceptance direction (full sweep in
+    benchmarks/continuous_vs_epoch.py): identical frozen traffic, same
+    policy — continuous admission serves at least as many requests as
+    the epoch-boundary baseline."""
+    from repro.serving.engine import ServingEngine
+    # cut at the epoch protocol's last admission boundary so both paths
+    # see identical offered load (3 of the 4 epochs carry arrivals)
+    base = ReplayGenerator.poisson(6.0, 3 * ENV.T_E, seed=1,
+                                   lengths=(2, 4, 8))
+    epoch = EpochRuntime(ENV, "dftsp",
+                         EngineExecutor(small_engine, seed=0)).run(
+        gen=ReplayGenerator(base.requests), n_epochs=4, seed=1,
+        warmup_epochs=0)
+    eng2 = ServingEngine(small_engine.cfg, params=small_engine._raw_params,
+                         batch_capacity=4, s_max=16, n_max=8)
+    cont = ContinuousRuntime(ENV, "dftsp",
+                             EngineContinuousExecutor(eng2, seed=0),
+                             k=2).run(gen=ReplayGenerator(base.requests),
+                                      n_epochs=4, seed=1, warmup_epochs=0)
+    assert_conserved(cont)
+    assert cont.served >= epoch.served
+    assert cont.admitted_mid_epoch > 0
+
+
+def test_engine_override_precision_labelled_honestly(small_engine):
+    """A quant_bits override is an engine-level choice, not a scheduled
+    METHODS decision — served_by_method must say so instead of claiming
+    the env's deployed method ran."""
+    gen = RequestGenerator(rate=6, seed=0, lengths=(2, 4, 8))
+    m = ContinuousRuntime(ENV, "dftsp",
+                          EngineContinuousExecutor(small_engine, seed=0,
+                                                   quant_bits=8),
+                          k=2).run(gen=gen, n_epochs=3, seed=0,
+                                   warmup_epochs=0)
+    assert m.served > 0
+    assert set(m.served_by_method) == {"weight_bits=8"}
+    assert 8 in small_engine.precisions_served
+
+
+# -- InfeasibleDecisionError: the schedulers-must-not-cheat contract ---------
+
+
+class CheatingPolicy(SchedulerPolicy):
+    """Schedules the whole queue but its own oracle rejects any
+    non-empty batch — the runtime's re-check must catch it."""
+
+    name = "cheating-stub"
+
+    def schedule(self, env, queue):
+        return Decision.single(list(queue))
+
+    def validate(self, env, decision):
+        return not decision.selected
+
+
+def test_runtime_raises_on_cheating_policy():
+    with pytest.raises(InfeasibleDecisionError, match="infeasible"):
+        EpochRuntime(ENV, CheatingPolicy(), AnalyticExecutor()).run(
+            rate=20, n_epochs=2, seed=0, warmup_epochs=0)
+
+
+def test_engine_admit_raises_when_clamped_batch_fails_oracle():
+    """Capacity clamping re-validates against the policy's oracle and
+    raises (not asserts) on failure — the contract survives python -O."""
+    gen = RequestGenerator(rate=10, seed=0)
+    reqs = gen.within(0, 1.0)
+    assert len(reqs) >= 3
+    fake_engine = types.SimpleNamespace(batch_capacity=1)
+    ex = EngineExecutor(fake_engine)
+    with pytest.raises(InfeasibleDecisionError, match="clamped"):
+        ex.admit(ENV, CheatingPolicy(), Decision.single(reqs[:3]))
+    # no spill => the oracle is not consulted, nothing raises
+    dec, spilled = ex.admit(ENV, CheatingPolicy(), Decision.single(reqs[:1]))
+    assert spilled == [] and dec.size == 1
+
+
+def test_infeasible_error_is_a_runtime_error():
+    assert issubclass(InfeasibleDecisionError, RuntimeError)
+    assert not issubclass(InfeasibleDecisionError, AssertionError)
