@@ -29,10 +29,9 @@ import argparse
 import sys
 
 from benchmarks.common import render, save_table
-from repro.config import get_arch
 from repro.core.environment import paper_env
 from repro.core.request import ReplayGenerator
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import tiny_engine
 from repro.serving.runtime import (ContinuousRuntime,
                                    EngineContinuousExecutor, EngineExecutor,
                                    EpochRuntime)
@@ -46,10 +45,8 @@ SPEEDUP_FLOOR = 1.2         # acceptance: continuous >= 1.2x req/s at the
 
 
 def _engine(params=None, seed=0):
-    cfg = get_arch("bloom-3b").scaled(n_layers=1, d_model=64, n_heads=2,
-                                      n_kv_heads=2, d_ff=128, vocab=256)
-    return ServingEngine(cfg, params=params, batch_capacity=B, s_max=S_MAX,
-                         n_max=N_MAX, seed=seed)
+    return tiny_engine("bloom-3b", params=params, batch_capacity=B,
+                       s_max=S_MAX, n_max=N_MAX, seed=seed)
 
 
 def run(fast: bool = False, n_epochs: int = 8, seed: int = 0,

@@ -1,0 +1,152 @@
+"""Multi-LLM continuous serving on real engines: the joint policy vs the
+per-model epoch baseline.
+
+One edge node hosts TWO real reduced engines (BLOOM-3B + BLOOM-7.1B
+scaled to CPU size) behind a ``MultiLLMEnv``; both protocols run the
+SAME frozen Poisson traffic (``ReplayGenerator``) randomly split across
+the hosted models (``random_tagger`` — stateless, so the two protocols'
+different time slicing sees identical splits):
+
+  * ``epoch``      — ``EpochRuntime`` + ``EngineExecutor``: the joint
+    ``multi-dftsp`` schedule at epoch boundaries, one fused decode per
+    scheduled per-model batch;
+  * ``continuous`` — ``ContinuousRuntime`` + ``EngineContinuousExecutor``:
+    one device-resident cohort PER HOSTED ENGINE, admission at every
+    chunked-segment boundary gated by the policy oracle AND the joint
+    ``multi_feasible`` re-check (the runtime raises
+    ``InfeasibleDecisionError`` if any admitted joint batch fails it, so
+    a completed run certifies node-wide P1 feasibility), with each fresh
+    cohort's quantization method picked by the ``quant=auto`` descent
+    and served through the engine's multi-precision weight cache.
+
+Sweeps arrival rate x chunk size and emits
+``experiments/benchmarks/multi_llm_continuous.json`` (CI uploads the
+--fast datapoint per PR).  Claim checked (deterministic request COUNTS
+on frozen traffic, so it gates in CI): at the highest swept arrival
+rate, the continuous multi-engine node serves >= 1.2x the per-model
+epoch baseline's req/s, and per-cohort ``quant=auto`` selections appear
+in ``EpochTrace.quants``.
+
+  PYTHONPATH=src python -m benchmarks.multi_llm_continuous [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import render, save_table
+from repro.core.environment import paper_env
+from repro.core.multi import MultiLLMEnv, random_tagger
+from repro.core.request import ReplayGenerator
+from repro.serving.engine import tiny_engine
+from repro.serving.runtime import (ContinuousRuntime,
+                                   EngineContinuousExecutor, EngineExecutor,
+                                   EpochRuntime)
+
+HOSTED = ("bloom-3b", "bloom-7b1")
+RATES = [4.0, 8.0, 16.0]
+CHUNKS = [2, 4, 8]
+LENGTHS = (4, 8, 16)        # output caps, heterogeneous so rows free early
+B, S_MAX, N_MAX = 8, 16, 16
+SPEEDUP_FLOOR = 1.2         # acceptance: continuous >= 1.2x req/s at the
+                            # highest arrival rate
+
+
+def _engines(params=None, seed=0):
+    """Two real reduced engines, one per hosted model.  ``params`` shares
+    each arch's weights across runs so baseline and continuous serve
+    identical models."""
+    return {arch: tiny_engine(
+        arch, params=None if params is None else params[arch],
+        batch_capacity=B, s_max=S_MAX, n_max=N_MAX, seed=seed)
+        for arch in HOSTED}
+
+
+def run(fast: bool = False, n_epochs: int = 8, seed: int = 0,
+        quiet: bool = False):
+    rates = [8.0] if fast else RATES
+    chunks = [2] if fast else CHUNKS
+    menv = MultiLLMEnv.host({m: paper_env(m, "W8A16") for m in HOSTED})
+    tagger = random_tagger(sorted(menv.envs), seed=seed)
+
+    first = _engines(seed=seed)
+    params = {m: e._raw_params for m, e in first.items()}
+    rows = []
+    quants_seen: set = set()
+    for rate in rates:
+        # freeze the stream at the epoch baseline's LAST admission
+        # boundary so the continuous grid's finer interior windows
+        # replay exactly the same offered load
+        traffic = ReplayGenerator.poisson(
+            rate, (n_epochs - 1) * menv.T_E, seed=seed, lengths=LENGTHS)
+        base = EpochRuntime(
+            menv, "multi-dftsp",
+            EngineExecutor(_engines(params, seed), seed=seed)).run(
+            gen=ReplayGenerator(traffic.requests), n_epochs=n_epochs,
+            seed=seed, warmup_epochs=0, tag_arrivals=tagger)
+        for k in chunks:
+            rt = ContinuousRuntime(
+                menv, "multi-dftsp:quant=auto",
+                EngineContinuousExecutor(_engines(params, seed), seed=seed),
+                k=k)
+            # a completed run certifies every admitted joint batch passed
+            # multi_feasible: the runtime re-checks each admission and
+            # raises InfeasibleDecisionError otherwise
+            cont = rt.run(gen=ReplayGenerator(traffic.requests),
+                          n_epochs=n_epochs, seed=seed, warmup_epochs=0,
+                          tag_arrivals=tagger)
+            assert cont.arrived == cont.served + cont.dropped \
+                + len(cont.final_queue_rids)
+            epoch_quants = [t.quants for t in cont.traces if t.quants]
+            assert epoch_quants, "quant=auto cohorts must record methods"
+            quants_seen.update(q for tq in epoch_quants
+                               for q in tq.values())
+            rows.append([rate, k, rt.segments_per_epoch,
+                         base.served, cont.served,
+                         round(base.throughput, 3),
+                         round(cont.throughput, 3),
+                         round(cont.served / max(base.served, 1), 2),
+                         cont.admitted_mid_epoch,
+                         round(cont.mean_occupancy, 2),
+                         " ".join(f"{m}:{n}" for m, n in
+                                  sorted(cont.served_by_model.items())),
+                         " ".join(sorted(cont.served_by_method))])
+
+    header = ["rate", "k", "seg_per_epoch", "epoch_served", "cont_served",
+              "epoch_req_s", "cont_req_s", "speedup", "mid_epoch_admits",
+              "occupancy", "served_by_model", "methods"]
+    out = render(header, rows,
+                 "Multi-LLM continuous serving (2 engines, joint "
+                 f"admission, quant=auto; {n_epochs} epochs, B={B} per "
+                 f"engine, n_max={N_MAX})")
+    if not quiet:
+        print(out)
+    top = max(rates)
+    at_top = [r for r in rows if r[0] == top]
+    ok = bool(at_top) and max(r[7] for r in at_top) >= SPEEDUP_FLOOR
+    save_table("multi_llm_continuous", header, rows,
+               meta={"n_epochs": n_epochs, "hosted": list(HOSTED),
+                     "batch_capacity": B, "s_max": S_MAX, "n_max": N_MAX,
+                     "lengths": LENGTHS, "fast": fast,
+                     "speedup_floor": SPEEDUP_FLOOR,
+                     "floor_met_at_top_rate": ok,
+                     "quants_selected": sorted(quants_seen)})
+    print(f"[multi_llm_continuous] continuous >= {SPEEDUP_FLOOR}x epoch "
+          f"req/s at rate {top}: {'PASS' if ok else 'FAIL'} "
+          f"(methods selected: {sorted(quants_seen)})")
+    return rows, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="one rate, one chunk size (CI smoke)")
+    args = ap.parse_args(argv)
+    # the gate compares deterministic served-request COUNTS on frozen
+    # traffic (not wall-clock), so it holds on hosted CI runners too
+    _, ok = run(fast=args.fast)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,7 @@ def main(argv=None):
                             fig6_adaptive as f6ad,
                             table3_pruning_complexity as t3,
                             multi_llm_throughput as ml,
+                            multi_llm_continuous as mlc,
                             engine_decode as ed,
                             continuous_vs_epoch as cve,
                             roofline_report as rr)
@@ -38,6 +39,7 @@ def main(argv=None):
             ("multi_llm", ml, {"n_epochs": max(6, n // 2)}),
             ("engine_decode", ed, {"fast": args.fast}),
             ("continuous", cve, {"fast": args.fast}),
+            ("multi_continuous", mlc, {"fast": args.fast}),
             ("roofline", rr, {})):
         t0 = time.time()
         print(f"\n{'=' * 70}\n[bench] {name}\n{'=' * 70}")

@@ -1,11 +1,17 @@
 """Multi-LLM edge node: one EN hosting BLOOM-3B + BLOOM-7.1B (paper §II's
-"adaptable for multiple LLMs" remark, made concrete).
+"adaptable for multiple LLMs" remark, made concrete) — served on the
+CONTINUOUS path with real engines.
 
-Requests arrive tagged for a model (``Request.model_id``); the joint
-``multi-dftsp`` policy — built from the same registry as the single-model
-schedulers — runs DFTSP per model against the SHARED
-memory/compute/spectrum budgets, with earlier batches' compute queueing
-in front of later ones (single T_C slot).
+Requests arrive tagged for a model (``Request.model_id``).  The joint
+``multi-dftsp`` policy — built from the same registry as the
+single-model schedulers — first shows one epoch of joint batch
+selection against the SHARED memory/compute/spectrum budgets; then the
+node serves frozen traffic end to end through
+``ContinuousRuntime`` + ``EngineContinuousExecutor``: one device-resident
+cohort per hosted engine, admission at every chunked-segment boundary
+gated by the joint ``multi_feasible`` oracle, and each fresh cohort's
+quantization method picked by the ``quant=auto`` descent and served via
+the engines' multi-precision weight caches.
 
   PYTHONPATH=src python examples/multi_llm_node.py
 """
@@ -13,19 +19,25 @@ from __future__ import annotations
 
 from repro.core import problem
 from repro.core.environment import paper_env
-from repro.core.multi import MultiLLMEnv, tag
+from repro.core.multi import MultiLLMEnv, random_tagger, tag
 from repro.core.policy import get_policy
-from repro.core.request import RequestGenerator
+from repro.core.request import ReplayGenerator, RequestGenerator
+from repro.serving.engine import tiny_engine
+from repro.serving.runtime import (ContinuousRuntime,
+                                   EngineContinuousExecutor, EngineExecutor,
+                                   EpochRuntime)
+
+HOSTED = ("bloom-3b", "bloom-7b1")
 
 
-def main():
-    menv = MultiLLMEnv.host({
-        "bloom-3b": paper_env("bloom-3b", "W8A16"),
-        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
-    })
-    print(f"edge node hosts 2 LLMs; resident weights "
-          f"{menv.weight_bytes() / 1e9:.1f} GB of {menv.M / 1e9:.0f} GB")
+def make_engines(seed=0):
+    """One reduced real engine per hosted model (CPU-sized)."""
+    return {arch: tiny_engine(arch, batch_capacity=8, s_max=16, n_max=16,
+                              seed=seed) for arch in HOSTED}
 
+
+def joint_schedule_demo(menv):
+    """One epoch of joint batch selection (the analytic control plane)."""
     gen = RequestGenerator(rate=40, seed=0)
     reqs = gen.within(0, 2.0)
     half = len(reqs) // 2
@@ -36,20 +48,60 @@ def main():
     policy = get_policy("multi-dftsp:order=weight")
     decision = policy.schedule(menv, pool)
     assert policy.validate(menv, decision)
-    stats = decision.stats
     for mid, batch in decision.batches.items():
         env = menv.envs[mid]
         t = problem.batch_compute_time(env, batch) if batch else 0.0
         print(f"  {mid:10s}: {len(batch):2d} scheduled, "
               f"batch compute {t * 1e3:6.1f} ms")
-    print(f"total {stats.z_solved} served this epoch "
-          f"({stats.nodes_visited} nodes searched)")
+    print(f"total {decision.stats.z_solved} served this epoch "
+          f"({decision.stats.nodes_visited} nodes searched)")
 
-    # contrast: the same node dedicating everything to one model
-    solo = policy.schedule(MultiLLMEnv.host(
-        {"bloom-3b": menv.envs["bloom-3b"]}), tag(list(reqs), "bloom-3b"))
-    print(f"(single-model reference: {solo.size} "
-          f"of the same {len(reqs)} requests)")
+
+def continuous_serving_demo(menv, n_epochs=6, rate=8.0, k=2):
+    """Both protocols on identical frozen traffic, real engines."""
+    tagger = random_tagger(sorted(menv.envs), seed=0)
+    traffic = ReplayGenerator.poisson(rate, (n_epochs - 1) * menv.T_E,
+                                      seed=0, lengths=(4, 8, 16))
+
+    epoch = EpochRuntime(menv, "multi-dftsp",
+                         EngineExecutor(make_engines(), seed=0)).run(
+        gen=ReplayGenerator(traffic.requests), n_epochs=n_epochs, seed=0,
+        warmup_epochs=0, tag_arrivals=tagger)
+    runtime = ContinuousRuntime(
+        menv, "multi-dftsp:quant=auto",
+        EngineContinuousExecutor(make_engines(), seed=0), k=k)
+    cont = runtime.run(gen=ReplayGenerator(traffic.requests),
+                       n_epochs=n_epochs, seed=0, warmup_epochs=0,
+                       tag_arrivals=tagger)
+
+    print(f"\n  {'':24s}{'epoch-boundary':>16s}{'continuous':>14s}")
+    for label, a, b in (
+            ("served", epoch.served, cont.served),
+            ("req/s", f"{epoch.throughput:.2f}", f"{cont.throughput:.2f}"),
+            ("mid-epoch admissions", 0, cont.admitted_mid_epoch),
+            ("mean slot occupancy", "-", f"{cont.mean_occupancy:.2f}")):
+        print(f"  {label:24s}{str(a):>16s}{str(b):>14s}")
+    print(f"  continuous speedup: {cont.served / max(epoch.served, 1):.2f}x "
+          f"({runtime.segments_per_epoch} admission points per epoch vs 1)")
+    print("\n  per-model served (continuous): "
+          + ", ".join(f"{m}: {n}"
+                      for m, n in sorted(cont.served_by_model.items())))
+    print("  served by method (quant=auto): "
+          + ", ".join(f"{m}: {n}"
+                      for m, n in sorted(cont.served_by_method.items())))
+    print("  per-epoch cohort methods:")
+    for t in cont.traces:
+        if t.quants:
+            sel = " ".join(f"{m}={q}" for m, q in sorted(t.quants.items()))
+            print(f"    epoch {t.epoch}: {sel}")
+
+
+def main():
+    menv = MultiLLMEnv.host({m: paper_env(m, "W8A16") for m in HOSTED})
+    print(f"edge node hosts {len(HOSTED)} LLMs; resident weights "
+          f"{menv.weight_bytes() / 1e9:.1f} GB of {menv.M / 1e9:.0f} GB")
+    joint_schedule_demo(menv)
+    continuous_serving_demo(menv)
 
 
 if __name__ == "__main__":

@@ -75,6 +75,11 @@ class EpochMetrics:
     nodes_visited: int = 0
     leaves_checked: int = 0
     served_by_method: Dict[str, int] = field(default_factory=dict)
+    served_by_model: Dict[Optional[str], int] = field(default_factory=dict)
+                                  # requests served per hosted model
+                                  # (key None on a single-model node) —
+                                  # the per-model split the multi-LLM
+                                  # benchmarks report
     traces: List[EpochTrace] = field(default_factory=list)
     segments: int = 0             # chunked segments run (continuous path)
     admitted_mid_epoch: int = 0   # admissions at interior segment

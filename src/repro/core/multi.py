@@ -21,6 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import comm, problem
 from repro.core.dftsp import SearchStats, dftsp_schedule, dftsp_schedule_auto
 from repro.core.environment import EdgeEnv
@@ -65,6 +67,28 @@ def tag(requests: Sequence[Request], model_id: str) -> List[Request]:
     for r in requests:
         r.model_id = model_id
     return list(requests)
+
+
+def random_tagger(model_ids: Sequence[str], seed: int = 0):
+    """A ``tag_arrivals`` hook assigning each arrival a pseudo-random
+    hosted model — the multi-LLM traffic shape of the conservation suite
+    and the multi-engine benchmarks.
+
+    The assignment is a pure function of ``(seed, rid)``, NOT a shared
+    RNG stream: the epoch runtime tags arrivals per epoch while the
+    continuous runtime tags the same stream per segment window, so any
+    stateful tagger would hand the two protocols different model splits
+    for identical traffic.  Stateless hashing keeps them like-for-like.
+    """
+    ids = list(model_ids)
+
+    def tag_arrivals(arrivals: Sequence[Request]) -> List[Request]:
+        for r in arrivals:
+            rng = np.random.default_rng((seed, r.rid))
+            r.model_id = ids[int(rng.integers(len(ids)))]
+        return list(arrivals)
+
+    return tag_arrivals
 
 
 def model_order(menv: MultiLLMEnv, order: str = "weight") -> List[str]:

@@ -110,6 +110,23 @@ class SchedulerPolicy:
         return problem.feasible(env, decision.selected,
                                 quant=decision.quants.get(None))
 
+    def select_quant(self, env: Env, model_id: Optional[str],
+                     batch: Sequence[Request]) -> Optional[QuantMethod]:
+        """The method a freshly starting continuous-batching COHORT of
+        ``model_id`` should be served with, given the queued requests
+        ``batch`` it would be built from (``None`` = the env's deployed
+        method).
+
+        The continuous runtime never calls ``schedule()`` — admission
+        replaces batch selection — so this is where the quantization
+        decision surfaces on that path: policies with a pinned method
+        return it, and ``quant="auto"`` policies run the PR-2 descent
+        (accuracy prefilter + Pareto pruning + (z, method) descent) over
+        the prospective cohort pool.  The default keeps the deployed
+        method, which is bit-identical to the pre-decision behavior.
+        """
+        return None
+
     @property
     def spec(self) -> str:
         """Canonical registry spec (non-default constructor params only)."""
@@ -244,6 +261,15 @@ class DftspPolicy(SchedulerPolicy):
         sel, stats = dftsp_schedule(env, queue, quant=q, **kw)
         return Decision.single(sel, stats, quant=q)
 
+    def select_quant(self, env: EdgeEnv, model_id: Optional[str],
+                     batch: Sequence[Request]) -> Optional[QuantMethod]:
+        if self.quant == "env" or not batch:
+            return None
+        if self.quant != "auto":
+            return _resolve_quant_param(self.quant)
+        _, method, _ = dftsp_schedule_auto(env, list(batch))
+        return method
+
 
 @register("brute_force")
 class BruteForcePolicy(SchedulerPolicy):
@@ -350,6 +376,19 @@ class MultiDftspPolicy(SchedulerPolicy):
         return _multi.multi_feasible(menv, decision.batches,
                                      order=self.order,
                                      quants=decision.quants)
+
+    def select_quant(self, menv: "_multi.MultiLLMEnv",
+                     model_id: Optional[str],
+                     batch: Sequence[Request]) -> Optional[QuantMethod]:
+        """Per-cohort method for the continuous path: the PR-2 descent on
+        this model's single-model view (the joint budgets are enforced by
+        the admission oracle, not here)."""
+        if self.quant == "env" or not batch:
+            return None
+        if self.quant != "auto":
+            return get_method(self.quant)
+        _, method, _ = dftsp_schedule_auto(menv.envs[model_id], list(batch))
+        return method
 
 
 # ---------------------------------------------------------------------------

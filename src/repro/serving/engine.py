@@ -51,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
+from repro.config import ModelConfig, get_arch
 from repro.models.api import Model, build_model
 from repro.quant.ptq import dequantize_tree, quantize_tree
 
@@ -93,6 +93,17 @@ class DecodeState:
     @property
     def batch_capacity(self) -> int:
         return int(self.caps_host.shape[0])
+
+
+def tiny_engine(arch_id: str, **engine_kw) -> "ServingEngine":
+    """A CPU-sized reduced engine for ``arch_id`` (1 layer, d_model 64,
+    vocab 256) — the ONE copy of the reduced-model shape the multi-engine
+    benchmarks, examples and tests build their "identical reduced
+    engines on both protocols" premise on.  ``engine_kw`` passes through
+    to ``ServingEngine`` (``params=``, ``batch_capacity=``, ...)."""
+    cfg = get_arch(arch_id).scaled(n_layers=1, d_model=64, n_heads=2,
+                                   n_kv_heads=2, d_ff=128, vocab=256)
+    return ServingEngine(cfg, **engine_kw)
 
 
 class ServingEngine:
@@ -463,7 +474,8 @@ class ServingEngine:
 
     def refill_chunked(self, state: DecodeState, slots: Sequence[int],
                        prompts: Sequence[Sequence[int]],
-                       n_tokens: Sequence[int], t_now: int) -> DecodeState:
+                       n_tokens: Sequence[int], t_now: int,
+                       cap_max: Optional[int] = None) -> DecodeState:
         """Prefill new prompts into freed slots of a LIVE cohort.
 
         The new prompts are padded into their slot rows, prefilled as one
@@ -472,22 +484,30 @@ class ServingEngine:
         ``_refill_merge`` so live rows keep decoding untouched.  A
         refilled row's cap is clamped to ``headroom(t_now)`` so its cache
         writes stay inside ``s_max + n_max``; callers gate admission on
-        that headroom.  Cache slots between a refilled row's prompt and
-        the cohort's current position hold zero K/V — junk attention
-        positions of the same class as the engine's padded prompts (the
-        paper's s' padding); recurrent-state families have no such gap.
+        that headroom.  ``cap_max`` tightens the clamp further — a
+        multi-engine node passes the MINIMUM remaining headroom across
+        every live cohort it hosts, since the shared provisioning window
+        the admission oracle validated against ends when the
+        most-advanced cohort exhausts (see
+        ``EngineContinuousExecutor.node_headroom``).  Cache slots between
+        a refilled row's prompt and the cohort's current position hold
+        zero K/V — junk attention positions of the same class as the
+        engine's padded prompts (the paper's s' padding);
+        recurrent-state families have no such gap.
         """
         B = self.batch_capacity
         params = self.params_for(state.bits)
         toks = np.zeros((B, self.s_max), np.int32)
         new_caps = np.zeros((B,), np.int32)
         refill = np.zeros((B,), bool)
-        cap_max = min(self.n_max, self.headroom(t_now))
+        cap_lim = min(self.n_max, self.headroom(t_now))
+        if cap_max is not None:
+            cap_lim = min(cap_lim, max(0, int(cap_max)))
         for slot, p, n in zip(slots, prompts, n_tokens):
             p = list(p)[-self.s_max:]
             if p:
                 toks[slot, -len(p):] = p
-            new_caps[slot] = min(int(n), cap_max)
+            new_caps[slot] = min(int(n), cap_lim)
             refill[slot] = True
         toks_j, caps_j, refill_j = jax.device_put((toks, new_caps, refill))
         new_cur, new_cache = self._prefill(params, self._as_batch(toks_j))

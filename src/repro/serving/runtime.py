@@ -32,7 +32,16 @@ lifecycle, but the data plane (a ``ContinuousExecutor``) runs chunked
 decode segments and ADMITS queued requests at every segment boundary —
 each slot refill gated by ``policy.validate()`` on the joint
 resident-plus-candidate batch, so the paper's P1 constraints still hold
-for everything on the device.  See DESIGN.md §2.1.
+for everything on the device.  On a ``MultiLLMEnv`` the executor keeps
+one device-resident cohort PER HOSTED ENGINE and every admission is
+additionally re-checked against the authoritative joint oracle
+(``multi.multi_feasible``) — per-model feasibility does not compose on
+shared node budgets, and a policy that pretends it does raises
+``InfeasibleDecisionError`` instead of serving.  Each freshly started
+cohort picks its quantization method through the policy's
+``select_quant`` (the PR-2 ``quant=auto`` descent on the continuous
+path), served via the engine's multi-precision weight cache and
+recorded in ``EpochTrace.quants``.  See DESIGN.md §2.1/§2.2.
 """
 from __future__ import annotations
 
@@ -44,9 +53,10 @@ import numpy as np
 
 from repro.core.environment import EdgeEnv
 from repro.core.metrics import EpochMetrics, EpochTrace
-from repro.core.multi import MultiLLMEnv
+from repro.core.multi import MultiLLMEnv, multi_feasible
 from repro.core.policy import (Decision, InfeasibleDecisionError,
                                SchedulerPolicy, as_policy)
+from repro.core.quantization import QuantMethod
 from repro.core.request import Request, RequestGenerator
 
 Env = Union[EdgeEnv, MultiLLMEnv]
@@ -272,6 +282,8 @@ class EpochRuntime:
                         name = quants[mid]
                         m.served_by_method[name] = \
                             m.served_by_method.get(name, 0) + len(batch)
+                        m.served_by_model[mid] = \
+                            m.served_by_model.get(mid, 0) + len(batch)
             m.traces.append(EpochTrace(
                 epoch=e, arrived=len(arrivals), dropped=n_dropped,
                 selected_rids=[r.rid for r in sel], truncated=len(spilled),
@@ -313,7 +325,7 @@ class ContinuousExecutor:
 
     def _make_pool(self, mid: Optional[str]) -> dict:
         return {"capacity": self._capacity(mid), "resident": {},
-                "pending": []}
+                "pending": [], "quant": None}
 
     def _capacity(self, mid: Optional[str]) -> int:
         raise NotImplementedError
@@ -354,11 +366,29 @@ class ContinuousExecutor:
         return all(not p["resident"] and not p["pending"]
                    for p in self._pools.values())
 
-    def method_name(self, env_r: EdgeEnv) -> str:
+    # -- per-cohort quantization lifecycle -----------------------------------
+
+    def set_quant(self, mid: Optional[str],
+                  method: Optional[QuantMethod]) -> None:
+        """Record the method the cohort STARTING in pool ``mid`` is served
+        with (``None`` = the deployment default).  Called by the runtime
+        at the first admission into an empty pool; the value sticks for
+        the cohort's whole life (refills join at the cohort's precision)
+        and is overwritten when the next cohort starts."""
+        self._pools[mid]["quant"] = method
+
+    def quant_of(self, mid: Optional[str]) -> Optional[QuantMethod]:
+        """The method the pool's current cohort is served with (None =
+        deployment default)."""
+        return self._pools[mid]["quant"]
+
+    def method_name(self, mid: Optional[str], env_r: EdgeEnv) -> str:
         """Label for ``served_by_method`` accounting: the precision this
-        executor actually serves with (the env's deployed method unless
-        a subclass overrides it)."""
-        return env_r.quant.name
+        pool's cohort actually serves with — the per-cohort decided
+        method if one was set, else the env's deployed method (engine
+        subclasses may add engine-level overrides)."""
+        q = self._pools[mid]["quant"]
+        return q.name if q is not None else env_r.quant.name
 
     # -- token mechanics (subclass contract) ---------------------------------
 
@@ -435,24 +465,43 @@ class EngineContinuousExecutor(ContinuousExecutor):
     service ``min(n_i, n_max)`` so refills are never silently truncated.
 
     ``engines`` is one engine or a ``{model_id: ServingEngine}`` dict
-    (mirroring ``EngineExecutor``); ``quant_bits`` optionally pins the
-    served weight precision per cohort (None = engine default) — an
-    engine-level override, not a scheduled method, so
-    ``served_by_method`` records it as ``"weight_bits=<b>"`` rather than
-    borrowing a METHODS name whose beta/accuracy terms were never
-    applied.
+    keyed like the hosted ``MultiLLMEnv`` (mirroring ``EngineExecutor``)
+    — ONE device-resident cohort per hosted engine, all advancing on the
+    node's shared segment grid.  Refill caps are clamped to
+    ``node_headroom``: the MINIMUM remaining headroom across the node's
+    live cohorts, since the shared provisioning window the joint
+    admission oracle validated against ends when the most-advanced
+    cohort exhausts and forces a re-admission point.
+
+    Each cohort's served precision is the runtime-decided method
+    (``set_quant``, from ``policy.select_quant`` at cohort start) via
+    the engine's multi-precision weight cache; ``quant_bits`` optionally
+    pins an engine-level fallback for cohorts with no decided method —
+    an override, not a scheduled method, so ``served_by_method`` records
+    it as ``"weight_bits=<b>"`` rather than borrowing a METHODS name
+    whose beta/accuracy terms were never applied.
     """
 
     def __init__(self, engines, rng: Optional[np.random.Generator] = None,
-                 seed: int = 0, quant_bits: Optional[int] = None):
+                 seed: int = 0, quant_bits: Optional[int] = None,
+                 collect_tokens: bool = False):
         super().__init__()
         if not isinstance(engines, dict):
             engines = {None: engines}
         self.engines = engines
         self.rng = rng if rng is not None else np.random.default_rng(seed)
         self.quant_bits = quant_bits
+        # rid -> generated token ids, filled at completion when enabled
+        # (one full poll per segment instead of the light occupancy poll
+        # — equivalence tests only; leave off on the hot path)
+        self.collect_tokens = collect_tokens
+        self.outputs: Dict[int, np.ndarray] = {}
 
     def _make_pool(self, mid):
+        if mid not in self.engines:
+            raise KeyError(
+                f"no ServingEngine bound for hosted model {mid!r}; "
+                f"executor hosts {sorted(map(str, self.engines))}")
         pool = super()._make_pool(mid)
         pool.update(engine=self.engines[mid], state=None, t=0)
         return pool
@@ -463,22 +512,49 @@ class EngineContinuousExecutor(ContinuousExecutor):
     def tokens_per_epoch(self) -> int:
         return max(e.n_max for e in self.engines.values())
 
-    def method_name(self, env_r: EdgeEnv) -> str:
+    def method_name(self, mid, env_r: EdgeEnv) -> str:
+        q = self._pools[mid]["quant"]
+        if q is not None:
+            return q.name
         if self.quant_bits is None:
             return env_r.quant.name
         return f"weight_bits={self.quant_bits}"
+
+    def _cohort_bits(self, pool) -> Optional[int]:
+        """Weight precision a starting cohort is served at: the decided
+        method's width, else the engine-level override, else None (the
+        engine default)."""
+        q = pool["quant"]
+        return q.weight_bits if q is not None else self.quant_bits
+
+    def node_headroom(self, mid) -> int:
+        """Output tokens a refill into ``mid`` can be promised: bounded
+        by the target engine's ``n_max`` AND by every live cohort's
+        remaining cache headroom — on a shared node the cohorts advance
+        in lock-step, so the provisioning window closes when the
+        most-advanced cohort exhausts, whichever pool it lives in.
+        (With a single pool this reduces to the pool's own headroom.)"""
+        live = [p["engine"].headroom(p["t"])
+                for p in self._pools.values() if p["state"] is not None]
+        return min([self.engines[mid].n_max] + live)
 
     def accepts(self, mid, r) -> bool:
         if not super().accepts(mid, r):
             return False
         pool = self._pools[mid]
         if pool["state"] is None:
-            return True
-        eng = pool["engine"]
-        return eng.headroom(pool["t"]) >= min(r.n, eng.n_max)
+            return True     # fresh cohort: full n_max headroom of its own
+        return self.node_headroom(mid) >= min(r.n, pool["engine"].n_max)
 
     def step(self, env, k):
         finished, occupied, capacity = [], 0, 0
+        # Refill clamps are computed BEFORE any pool mutates — the same
+        # headroom view admission was gated on at this boundary, so an
+        # accepted candidate can never be silently truncated by another
+        # pool starting or advancing earlier in the dict order.
+        clamps = {mid: self.node_headroom(mid)
+                  for mid, pool in self._pools.items()
+                  if pool["pending"] and pool["state"] is not None}
         for mid, pool in self._pools.items():
             eng = pool["engine"]
             if pool["pending"]:
@@ -487,14 +563,16 @@ class EngineContinuousExecutor(ContinuousExecutor):
                 prompts, caps = eng.synth_prompts(reqs, self.rng)
                 if pool["state"] is None:
                     pool["state"] = eng.start_chunked(
-                        prompts, caps, quant_bits=self.quant_bits)
+                        prompts, caps, quant_bits=self._cohort_bits(pool))
                     pool["t"] = 0
                 else:
                     pool["state"] = eng.refill_chunked(
                         pool["state"], slots, prompts, caps,
-                        t_now=pool["t"])
+                        t_now=pool["t"], cap_max=clamps[mid])
                 pool["resident"].update(zip(slots, reqs))
                 pool["pending"].clear()
+        for mid, pool in self._pools.items():
+            eng = pool["engine"]
             occupied += len(pool["resident"])
             capacity += pool["capacity"]
             if pool["state"] is None:
@@ -502,13 +580,16 @@ class EngineContinuousExecutor(ContinuousExecutor):
             pool["state"] = eng.generate_chunked(pool["state"], k)
             # light poll: the hot path only needs the occupancy view,
             # not the (B, n_max) token buffer
-            _, lengths, done, t = eng.poll_chunked(pool["state"],
-                                                   with_tokens=False)
+            out, lengths, done, t = eng.poll_chunked(
+                pool["state"], with_tokens=self.collect_tokens)
             pool["t"] = t
             caps_h = pool["state"].caps_host
             for slot, r in list(pool["resident"].items()):
                 if done[slot] or lengths[slot] >= caps_h[slot]:
                     finished.append((mid, r, int(lengths[slot])))
+                    if self.collect_tokens:
+                        self.outputs[r.rid] = \
+                            np.array(out[slot][:lengths[slot]])
                     del pool["resident"][slot]
             if not pool["resident"]:
                 pool["state"], pool["t"] = None, 0   # cohort drained
@@ -525,9 +606,16 @@ class ContinuousRuntime(EpochRuntime):
     ``policy.validate()`` on (resident ∪ candidate) — the paper's P1
     feasibility oracle reused as the admission-control contract, so no
     slot refill can violate the constraint set the scheduler enforces at
-    epoch boundaries.  Resident requests keep their admission-time
-    waits; ``schedule()`` is never called — continuous batching replaces
-    the batch-selection problem with per-request admission control.
+    epoch boundaries.  On a ``MultiLLMEnv`` the gate is NODE-WIDE: the
+    joint resident batch across every hosted cohort is additionally
+    re-checked against ``multi_feasible`` (raising
+    ``InfeasibleDecisionError`` on a policy whose oracle is only
+    per-model feasible), and each freshly started cohort's quantization
+    method comes from ``policy.select_quant`` (the PR-2 descent for
+    ``quant=auto``), recorded in ``EpochTrace.quants``.  Resident
+    requests keep their admission-time waits; ``schedule()`` is never
+    called — continuous batching replaces the batch-selection problem
+    with per-request admission control.
 
     Requests are counted served when their generation FINISHES (the
     epoch runtime counts at selection; with its execute-within-the-epoch
@@ -549,23 +637,85 @@ class ContinuousRuntime(EpochRuntime):
 
     # -- admission: validate()-gated first-fit -------------------------------
 
-    def _try_admit(self, queue: List[Request]) -> List[Request]:
+    def _assert_jointly_feasible(self, batches: Dict[Optional[str],
+                                                     List[Request]],
+                                 quants: Dict[Optional[str], QuantMethod]
+                                 ) -> None:
+        """Authoritative node-wide re-check on multi-LLM nodes: an
+        admission boundary must leave the JOINT resident batch feasible
+        under ``multi_feasible`` (shared spectrum, shared memory pool,
+        sequential compute slot).  Per-model feasibility does not compose
+        across cohorts on shared budgets — a policy whose oracle only
+        checks its own model's view cheats the node and is caught here,
+        at admission, before anything serves.  Run ONCE per boundary
+        (not per candidate): every joint constraint is monotone in batch
+        growth, so an infeasible intermediate state cannot become
+        feasible again by the end of the loop — same detection at 1/N
+        the oracle cost."""
+        if not isinstance(self.env, MultiLLMEnv):
+            return
+        order = getattr(self.policy, "order", "weight")
+        if not multi_feasible(self.env, batches, order=order,
+                              quants=quants):
+            raise InfeasibleDecisionError(
+                f"{self.policy.spec}: admission accepted a candidate "
+                f"whose joint resident batch fails multi_feasible — "
+                f"per-model feasibility does not compose on shared node "
+                f"budgets")
+
+    def _try_admit(self, queue: List[Request],
+                   trace: EpochTrace) -> List[Request]:
         """Admit queued requests into free slots, FIFO first-fit, each
         gated by the policy's own feasibility oracle on the joint
-        resident-plus-candidate batch.  The resident view is built once
-        per boundary and updated incrementally as candidates land."""
+        resident-plus-candidate batch — evaluated under every active
+        cohort's decided quantization method — then re-checked against
+        the joint ``multi_feasible`` oracle on multi-LLM nodes.  The
+        resident view is built once per boundary and updated
+        incrementally as candidates land.
+
+        The first admission into an empty pool STARTS a cohort: the
+        policy picks its quantization method (``select_quant``, the
+        PR-2 descent for ``quant=auto`` policies) over the queued
+        requests targeting that model, the executor pins the cohort to
+        it, and the choice is recorded in ``trace.quants``."""
         admitted: List[Request] = []
-        batches = {m: self.cexec.resident(m) for m in self.cexec.pool_ids()}
+        cexec = self.cexec
+        batches = {m: cexec.resident(m) for m in cexec.pool_ids()}
+        # methods the ACTIVE cohorts are being served with (a drained
+        # pool's stale method is ignored: its next cohort re-decides)
+        quants = {m: q for m in cexec.pool_ids()
+                  if batches[m] and (q := cexec.quant_of(m)) is not None}
+        fresh_sel: Dict[Optional[str], Optional[QuantMethod]] = {}
         for r in queue:
             mid = r.model_id
-            if mid not in batches or not self.cexec.accepts(mid, r):
+            if mid not in batches or not cexec.accepts(mid, r):
                 continue
+            starting = not batches[mid]
+            if starting:
+                if mid not in fresh_sel:
+                    fresh_sel[mid] = self.policy.select_quant(
+                        self.env, mid,
+                        [x for x in queue if x.model_id == mid])
+                q = fresh_sel[mid]
+            else:
+                q = quants.get(mid)
             batches[mid].append(r)
-            if self.policy.validate(self.env, Decision(batches=batches)):
-                self.cexec.place(mid, r)
+            trial = dict(quants)
+            if q is not None:
+                trial[mid] = q
+            if self.policy.validate(self.env, Decision(batches=batches,
+                                                       quants=trial)):
+                if starting:
+                    cexec.set_quant(mid, q)
+                    if q is not None:
+                        trace.quants[mid] = q.name
+                quants = trial
+                cexec.place(mid, r)
                 admitted.append(r)
             else:
                 batches[mid].pop()
+        if admitted:
+            self._assert_jointly_feasible(batches, quants)
         return admitted
 
     def _record_finished(self, finished: Sequence, counting: bool,
@@ -576,7 +726,9 @@ class ContinuousRuntime(EpochRuntime):
             if counting:
                 m.served += 1
                 m.generated_tokens += tokens
-                name = self.cexec.method_name(self._env_for(r))
+                m.served_by_model[mid] = \
+                    m.served_by_model.get(mid, 0) + 1
+                name = self.cexec.method_name(mid, self._env_for(r))
                 m.served_by_method[name] = \
                     m.served_by_method.get(name, 0) + 1
 
@@ -615,7 +767,7 @@ class ContinuousRuntime(EpochRuntime):
                 trace.dropped += n_dropped
                 if counting:
                     m.dropped += n_dropped
-                admitted = self._try_admit(queue)
+                admitted = self._try_admit(queue, trace)
                 if admitted:
                     got = {r.rid for r in admitted}
                     queue = [r for r in queue if r.rid not in got]

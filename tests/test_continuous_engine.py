@@ -192,6 +192,65 @@ def test_refill_caps_clamp_to_cohort_headroom(engine):
     assert lengths[3] <= state.caps_host[3]
 
 
+def test_refill_cap_max_tightens_headroom_clamp(engine):
+    """``cap_max`` (the shared-node minimum-headroom clamp) binds below
+    the cohort's own headroom; caps_host mirrors the clamped value."""
+    state = engine.start_chunked([[1, 2, 3]], n_tokens=[8])
+    state = engine.generate_chunked(state, 2)
+    _, _, _, t = engine.poll_chunked(state)
+    assert engine.headroom(t) > 1
+    state = engine.refill_chunked(state, [2], [[5, 5]], [8], t_now=t,
+                                  cap_max=1)
+    assert state.caps_host[2] == 1
+    # and a cap_max looser than the cohort's own headroom changes nothing
+    state2 = engine.refill_chunked(state, [3], [[6]], [8], t_now=t,
+                                   cap_max=engine.n_max * 2)
+    assert state2.caps_host[3] == min(8, engine.headroom(t))
+
+
+# -- multi-engine pool: interleaved cohorts stay bit-identical ----------------
+
+
+def test_two_engine_pool_chunked_bit_identical_k1_vs_kmax():
+    """The multi-engine slot pool drives one cohort PER ENGINE on the
+    node's shared segment grid.  Interleaving the engines' chunked
+    segments must not perturb either cohort: k=1 and k=n_max produce
+    bit-identical per-request token outputs for each model, equal to
+    each engine's one-shot fused ``generate``."""
+    engines = {arch: ServingEngine(reduced_cfg(arch), batch_capacity=4,
+                                   s_max=16, n_max=8)
+               for arch in ("bloom-3b", "bloom-7b1")}
+    prompts = {"bloom-3b": [[1, 2, 3], [7, 7]],
+               "bloom-7b1": [[4, 5, 6], [9]]}
+    caps = {"bloom-3b": [8, 5], "bloom-7b1": [6, 8]}
+
+    def drive(k):
+        """Advance every live cohort by one k-segment per round — the
+        executor's lock-step grid."""
+        live = {m: engines[m].start_chunked(prompts[m], caps[m])
+                for m in engines}
+        out = {}
+        while live:
+            for m in list(live):
+                eng = engines[m]
+                st = eng.generate_chunked(live[m], k)
+                o, lengths, done, t = eng.poll_chunked(st)
+                live[m] = st
+                if eng.exhausted(lengths, done, st.caps_host, t):
+                    out[m] = (o, lengths)
+                    del live[m]
+        return out
+
+    fine, coarse = drive(1), drive(8)
+    for m, eng in engines.items():
+        np.testing.assert_array_equal(fine[m][0], coarse[m][0])
+        np.testing.assert_array_equal(fine[m][1], coarse[m][1])
+        fused = eng.generate(prompts[m], n_tokens=caps[m])
+        nb = len(prompts[m])
+        np.testing.assert_array_equal(fine[m][0][:nb], fused.tokens)
+        np.testing.assert_array_equal(fine[m][1][:nb], fused.lengths)
+
+
 def test_refill_recurrent_family_matches_solo_decode():
     """Recurrent-state families carry no junk-attention positions, so a
     refilled row must decode bit-identically to serving its prompt

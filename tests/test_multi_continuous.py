@@ -1,0 +1,322 @@
+"""Multi-LLM continuous serving: shared-node slot pools, the joint
+admission oracle, per-cohort ``quant=auto``, and cross-runtime
+conservation.
+
+The load-bearing extension of tests/test_continuous_runtime.py to
+multi-model traffic: random ``model_id`` assignment over 2-3 hosted
+models, run against BOTH ``EpochRuntime`` and ``ContinuousRuntime`` for
+every ``multi-dftsp`` spec variant (orders, pinned method, and
+``quant=auto``) — the queue lifecycle must conserve requests
+(``arrived == served + dropped + queued``) and never serve a rid twice.
+On top: admission on a ``MultiLLMEnv`` is gated by the authoritative
+joint ``multi_feasible`` oracle (a per-model-only validate() raises
+``InfeasibleDecisionError``, it does not serve), and refills into a
+shared node clamp to the MINIMUM remaining headroom across the node's
+live cohorts.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import comm, problem
+from repro.core.environment import paper_env
+from repro.core.multi import MultiLLMEnv, random_tagger
+from repro.core.policy import (Decision, InfeasibleDecisionError,
+                               SchedulerPolicy)
+from repro.core.quantization import METHODS
+from repro.core.request import ReplayGenerator, Request, RequestGenerator
+from repro.serving.runtime import (AnalyticContinuousExecutor,
+                                   AnalyticExecutor, ContinuousRuntime,
+                                   EngineContinuousExecutor, EpochRuntime)
+
+HOSTED = ("bloom-3b", "bloom-7b1", "opt-13b")
+# every multi-dftsp registry variant the repo ships: visit orders, a
+# pinned METHODS override, and the adaptive per-cohort selection
+MULTI_SPECS = ["multi-dftsp", "multi-dftsp:order=name",
+               "multi-dftsp:order=load", "multi-dftsp:quant=W8A8",
+               "multi-dftsp:quant=auto"]
+
+
+def make_menv(n_models=3):
+    return MultiLLMEnv.host({m: paper_env(m, "W8A16")
+                             for m in HOSTED[:n_models]})
+
+
+def assert_conserved(m):
+    assert m.arrived == m.served + m.dropped + len(m.final_queue_rids), \
+        (m.arrived, m.served, m.dropped, len(m.final_queue_rids))
+
+
+def served_rids(m):
+    continuous = any(t.segments for t in m.traces)
+    pick = (lambda t: t.finished_rids) if continuous \
+        else (lambda t: t.selected_rids)
+    return [rid for t in m.traces if t.counted for rid in pick(t)]
+
+
+def _check_run(m):
+    assert_conserved(m)
+    rids = served_rids(m)
+    assert len(rids) == len(set(rids)) == m.served
+    assert sum(m.served_by_model.values()) == m.served
+
+
+# -- deterministic conservation over every multi-dftsp spec ------------------
+
+
+@pytest.mark.parametrize("spec", MULTI_SPECS)
+@pytest.mark.parametrize("n_models", [2, 3])
+def test_multi_conservation_both_runtimes(spec, n_models):
+    menv = make_menv(n_models)
+    tagger = random_tagger(sorted(menv.envs), seed=3)
+    epoch = EpochRuntime(menv, spec, AnalyticExecutor()).run(
+        rate=4, n_epochs=4, seed=7, warmup_epochs=0, tag_arrivals=tagger)
+    cont = ContinuousRuntime(menv, spec,
+                             AnalyticContinuousExecutor(capacity=4),
+                             k=64).run(rate=4, n_epochs=4, seed=7,
+                                       warmup_epochs=0, tag_arrivals=tagger)
+    for m in (epoch, cont):
+        _check_run(m)
+
+
+def test_random_tagger_is_stateless_across_slicings():
+    """The epoch loop tags per epoch, the continuous loop per segment:
+    the assignment must depend only on (seed, rid)."""
+    gen = RequestGenerator(rate=6, seed=0)
+    reqs = gen.within(0.0, 4.0)
+    whole = random_tagger(HOSTED, seed=5)(
+        [r for r in reqs])
+    ids_whole = [r.model_id for r in whole]
+    sliced = []
+    tag2 = random_tagger(HOSTED, seed=5)
+    for r in reqs:
+        sliced.extend(tag2([r]))
+    assert [r.model_id for r in sliced] == ids_whole
+
+
+# -- the hypothesis property over random multi-model streams -----------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(spec=st.sampled_from(MULTI_SPECS),
+           seed=st.integers(0, 2**16),
+           rate=st.floats(0.5, 4.0),
+           capacity=st.integers(1, 8),
+           k=st.sampled_from([1, 64, 256, 512]),
+           n_models=st.integers(2, 3))
+    def test_multi_conservation_property(spec, seed, rate, capacity, k,
+                                         n_models):
+        menv = make_menv(n_models)
+        tagger = random_tagger(sorted(menv.envs), seed=seed)
+        epoch = EpochRuntime(menv, spec, AnalyticExecutor()).run(
+            rate=rate, n_epochs=4, seed=seed, warmup_epochs=0,
+            tag_arrivals=tagger)
+        cont = ContinuousRuntime(
+            menv, spec, AnalyticContinuousExecutor(capacity=capacity),
+            k=k).run(rate=rate, n_epochs=4, seed=seed, warmup_epochs=0,
+                     tag_arrivals=tagger)
+        for m in (epoch, cont):
+            _check_run(m)
+
+
+# -- per-cohort quant=auto on the continuous path ----------------------------
+
+
+def test_continuous_quant_auto_records_cohort_methods():
+    """Each freshly started cohort's method lands in EpochTrace.quants
+    and served_by_method uses METHODS names (not env defaults only)."""
+    menv = make_menv(2)
+    tagger = random_tagger(sorted(menv.envs), seed=1)
+    m = ContinuousRuntime(menv, "multi-dftsp:quant=auto",
+                          AnalyticContinuousExecutor(capacity=4),
+                          k=128).run(rate=5, n_epochs=4, seed=1,
+                                     warmup_epochs=0, tag_arrivals=tagger)
+    _check_run(m)
+    assert m.served > 0
+    recorded = {q for t in m.traces for q in t.quants.values()}
+    assert recorded and recorded <= set(METHODS)
+    assert set(m.served_by_method) <= set(METHODS)
+
+
+def test_continuous_pinned_quant_validates_under_that_method():
+    """A pinned method flows through admission validation and into the
+    accounting: every served request is labelled with it."""
+    menv = make_menv(2)
+    tagger = random_tagger(sorted(menv.envs), seed=1)
+    m = ContinuousRuntime(menv, "multi-dftsp:quant=W8A8",
+                          AnalyticContinuousExecutor(capacity=4),
+                          k=128).run(rate=5, n_epochs=4, seed=1,
+                                     warmup_epochs=0, tag_arrivals=tagger)
+    _check_run(m)
+    assert m.served > 0
+    assert set(m.served_by_method) == {"W8A8"}
+
+
+# -- the joint oracle: per-model feasibility must not compose ----------------
+
+
+class PerModelOnlyPolicy(SchedulerPolicy):
+    """Cheating stub: validates each model's batch against ITS OWN
+    single-model P1 view and ignores the shared node budgets — exactly
+    the mistake the joint oracle exists to catch."""
+
+    name = "per-model-only-stub"
+
+    def schedule(self, env, queue):
+        return Decision(batches={m: [] for m in env.envs})
+
+    def validate(self, menv, decision):
+        return all(problem.feasible(menv.envs[mid], batch)
+                   for mid, batch in decision.batches.items()
+                   if mid in menv.envs)
+
+
+def _hog_request(env, rid, model_id, target=0.6):
+    """A request whose uplink share alone is ~``target`` of the shared
+    spectrum: per-model feasible, pairwise jointly infeasible."""
+    h = 1e-6
+    r = Request(rid=rid, s=512, n=4, tau=50.0, a=0.0, h=h, arrival=0.0,
+                model_id=model_id)
+    while comm.rho_min_up(env, r) < target:
+        h *= 0.8
+        r.h = h
+    rho = comm.rho_min_up(env, r)
+    assert target <= rho < 1.0, rho
+    assert problem.feasible(env, [r])
+    return r
+
+
+def test_jointly_infeasible_admission_raises_not_serves():
+    menv = make_menv(2)
+    reqs = [_hog_request(menv.envs["bloom-3b"], 0, "bloom-3b"),
+            _hog_request(menv.envs["bloom-7b1"], 1, "bloom-7b1")]
+    rt = ContinuousRuntime(menv, PerModelOnlyPolicy(),
+                           AnalyticContinuousExecutor(capacity=4), k=128)
+    with pytest.raises(InfeasibleDecisionError, match="multi_feasible"):
+        rt.run(gen=ReplayGenerator(reqs), n_epochs=2, seed=0,
+               warmup_epochs=0)
+
+
+def test_honest_joint_policy_defers_instead_of_raising():
+    """The same jointly-infeasible pair under the honest multi-dftsp
+    oracle: the second hog is simply NOT admitted while the first is
+    resident — no raise, conservation intact."""
+    menv = make_menv(2)
+    reqs = [_hog_request(menv.envs["bloom-3b"], 0, "bloom-3b"),
+            _hog_request(menv.envs["bloom-7b1"], 1, "bloom-7b1")]
+    m = ContinuousRuntime(menv, "multi-dftsp",
+                          AnalyticContinuousExecutor(capacity=4),
+                          k=128).run(gen=ReplayGenerator(reqs), n_epochs=2,
+                                     seed=0, warmup_epochs=0)
+    _check_run(m)
+    assert m.arrived == 2
+
+
+# -- shared-node refill headroom clamp ---------------------------------------
+
+
+@pytest.fixture(scope="module")
+def node_engines():
+    from repro.serving.engine import tiny_engine
+    return {arch: tiny_engine(arch, batch_capacity=2, s_max=8, n_max=8)
+            for arch in ("bloom-3b", "bloom-7b1")}
+
+
+def test_refill_clamp_pins_min_headroom_across_cohorts(node_engines):
+    """Regression for the shared-node clamp: a refill into cohort B must
+    be capped by cohort A's remaining headroom (the node's provisioning
+    window), not B's own — crafted state: A at t=5, B at t=2, n_max=8
+    => clamp is 3, not 6."""
+    ea, eb = node_engines["bloom-3b"], node_engines["bloom-7b1"]
+    ex = EngineContinuousExecutor(node_engines, seed=0)
+    menv = make_menv(2)
+    ex.bind(menv)
+    pa, pb = ex._pools["bloom-3b"], ex._pools["bloom-7b1"]
+    ra = Request(rid=0, s=3, n=8, tau=50.0, a=0.0, h=1.0,
+                 model_id="bloom-3b")
+    rb = Request(rid=1, s=2, n=8, tau=50.0, a=0.0, h=1.0,
+                 model_id="bloom-7b1")
+    pa["state"], pa["t"] = ea.start_chunked([[1, 2, 3]], [8]), 5
+    pa["resident"][0] = ra
+    pb["state"], pb["t"] = eb.start_chunked([[4, 5]], [8]), 2
+    pb["resident"][0] = rb
+    assert ex.node_headroom("bloom-7b1") == 3        # min(8-5, 8-2, 8)
+    assert ex.node_headroom("bloom-3b") == 3
+
+    # admission refuses a candidate the clamp would truncate...
+    hungry = Request(rid=2, s=2, n=8, tau=50.0, a=0.0, h=1.0,
+                     model_id="bloom-7b1")
+    assert not ex.accepts("bloom-7b1", hungry)
+    # ...and the clamp itself is defense in depth: force the refill
+    ex.place("bloom-7b1", hungry)
+    ex.step(menv, 1)
+    assert pb["state"].caps_host[1] == 3             # pinned: min headroom
+
+
+def test_fresh_cohort_keeps_full_headroom(node_engines):
+    """A cohort STARTING on a shared node is a new provisioning window:
+    its rows get their engine's full n_max, not the min clamp."""
+    ex = EngineContinuousExecutor(node_engines, seed=0)
+    menv = make_menv(2)
+    ex.bind(menv)
+    pa = ex._pools["bloom-3b"]
+    ra = Request(rid=0, s=3, n=8, tau=50.0, a=0.0, h=1.0,
+                 model_id="bloom-3b")
+    pa["state"], pa["t"] = \
+        node_engines["bloom-3b"].start_chunked([[1, 2, 3]], [8]), 5
+    pa["resident"][0] = ra
+    rb = Request(rid=1, s=2, n=8, tau=50.0, a=0.0, h=1.0,
+                 model_id="bloom-7b1")
+    assert ex.accepts("bloom-7b1", rb)               # fresh pool: full n_max
+    ex.place("bloom-7b1", rb)
+    ex.step(menv, 1)
+    assert ex._pools["bloom-7b1"]["state"].caps_host[0] == 8
+
+
+# -- engine-backed multi-LLM continuous end to end ---------------------------
+
+
+@pytest.fixture(scope="module")
+def serving_engines():
+    from repro.serving.engine import tiny_engine
+    return {arch: tiny_engine(arch, batch_capacity=4, s_max=16, n_max=8)
+            for arch in ("bloom-3b", "bloom-7b1")}
+
+
+def test_multi_engine_continuous_end_to_end(serving_engines):
+    menv = make_menv(2)
+    tagger = random_tagger(sorted(menv.envs), seed=0)
+    gen = RequestGenerator(rate=6, seed=0, lengths=(2, 4, 8))
+    ex = EngineContinuousExecutor(serving_engines, seed=0,
+                                  collect_tokens=True)
+    m = ContinuousRuntime(menv, "multi-dftsp:quant=auto", ex, k=2).run(
+        gen=gen, n_epochs=3, seed=0, warmup_epochs=0, tag_arrivals=tagger)
+    _check_run(m)
+    assert m.served > 0 and m.generated_tokens > 0
+    assert set(m.served_by_model) <= set(menv.envs)
+    # per-cohort selections recorded and actually served: the engines'
+    # precision sets reflect the decided methods' weight bits
+    recorded = {q for t in m.traces for q in t.quants.values()}
+    assert recorded and recorded <= set(METHODS)
+    bits_decided = {METHODS[q].weight_bits for q in recorded}
+    bits_served = set().union(*(e.precisions_served
+                                for e in serving_engines.values()))
+    assert bits_served <= {0 if b >= 16 else b for b in bits_decided}
+    # collected per-request outputs cover exactly the served rids
+    assert set(ex.outputs) == set(served_rids(m))
+
+
+def test_multi_engine_executor_requires_engine_per_hosted_model(
+        serving_engines):
+    ex = EngineContinuousExecutor(
+        {"bloom-3b": serving_engines["bloom-3b"]}, seed=0)
+    with pytest.raises(KeyError, match="no ServingEngine"):
+        ex.bind(make_menv(2))
