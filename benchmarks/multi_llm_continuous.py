@@ -73,6 +73,7 @@ def run(fast: bool = False, n_epochs: int = 8, seed: int = 0,
     params = {m: e._raw_params for m, e in first.items()}
     rows = []
     quants_seen: set = set()
+    occupancy_series: dict = {}
     for rate in rates:
         # freeze the stream at the epoch baseline's LAST admission
         # boundary so the continuous grid's finer interior windows
@@ -101,6 +102,12 @@ def run(fast: bool = False, n_epochs: int = 8, seed: int = 0,
             assert epoch_quants, "quant=auto cohorts must record methods"
             quants_seen.update(q for tq in epoch_quants
                                for q in tq.values())
+            # the full per-segment series, not just the scalar mean —
+            # paged_vs_slab and the plots need the shape of the
+            # occupancy trajectory, and means hide the drain tail
+            occupancy_series[f"rate{rate:g}_k{k}"] = [
+                round(o, 4) for t in cont.traces if t.counted
+                for o in t.occupancy]
             rows.append([rate, k, rt.segments_per_epoch,
                          base.served, cont.served,
                          round(base.throughput, 3),
@@ -130,7 +137,8 @@ def run(fast: bool = False, n_epochs: int = 8, seed: int = 0,
                      "lengths": LENGTHS, "fast": fast,
                      "speedup_floor": SPEEDUP_FLOOR,
                      "floor_met_at_top_rate": ok,
-                     "quants_selected": sorted(quants_seen)})
+                     "quants_selected": sorted(quants_seen),
+                     "occupancy_series": occupancy_series})
     print(f"[multi_llm_continuous] continuous >= {SPEEDUP_FLOOR}x epoch "
           f"req/s at rate {top}: {'PASS' if ok else 'FAIL'} "
           f"(methods selected: {sorted(quants_seen)})")

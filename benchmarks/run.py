@@ -24,6 +24,7 @@ def main(argv=None):
                             table3_pruning_complexity as t3,
                             multi_llm_throughput as ml,
                             multi_llm_continuous as mlc,
+                            paged_vs_slab as pvs,
                             engine_decode as ed,
                             continuous_vs_epoch as cve,
                             roofline_report as rr)
@@ -40,6 +41,7 @@ def main(argv=None):
             ("engine_decode", ed, {"fast": args.fast}),
             ("continuous", cve, {"fast": args.fast}),
             ("multi_continuous", mlc, {"fast": args.fast}),
+            ("paged_vs_slab", pvs, {"fast": args.fast}),
             ("roofline", rr, {})):
         t0 = time.time()
         print(f"\n{'=' * 70}\n[bench] {name}\n{'=' * 70}")

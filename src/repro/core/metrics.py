@@ -52,6 +52,12 @@ class EpochTrace:
     admitted_mid_epoch: int = 0
     occupancy: List[float] = field(default_factory=list)
     finished_rids: List[int] = field(default_factory=list)
+    # KV-block accounting (continuous path, DESIGN.md §2.3): blocks in
+    # use after each of this epoch's segments, against the node total.
+    # Slot-level for data planes without a physical block pool; true
+    # arena pages under the paged engine executor.
+    kv_blocks_in_use: List[int] = field(default_factory=list)
+    kv_blocks_total: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -90,6 +96,12 @@ class EpochMetrics:
                                   # ended (conservation accounting:
                                   # arrived == served + dropped + queued
                                   # for warmup_epochs=0 runs)
+    kv_alloc_tokens: int = 0      # Σ per-segment allocated KV tokens
+                                  # (pages_in_use × block_tokens under
+                                  # the arena; 0 without block
+                                  # accounting)
+    kv_dead_tokens: int = 0       # Σ per-segment allocated-but-dead KV
+                                  # tokens (junk gaps + reserved tail)
 
     @property
     def throughput(self) -> float:
@@ -114,6 +126,26 @@ class EpochMetrics:
         segments (0.0 under the epoch-boundary runtime)."""
         occ = [o for t in self.traces if t.counted for o in t.occupancy]
         return sum(occ) / len(occ) if occ else 0.0
+
+    @property
+    def mean_block_occupancy(self) -> float:
+        """Mean KV-blocks-in-use fraction across counted continuous
+        segments (DESIGN.md §2.3).  Slot-level (== occupancy) for data
+        planes without a block pool; true page occupancy under the
+        paged arena — the number ``benchmarks/paged_vs_slab.py`` gates
+        against the slab baseline."""
+        fracs = [u / t.kv_blocks_total for t in self.traces
+                 if t.counted and t.kv_blocks_total
+                 for u in t.kv_blocks_in_use]
+        return sum(fracs) / len(fracs) if fracs else 0.0
+
+    @property
+    def fragmentation(self) -> float:
+        """Allocated-but-dead KV tokens over allocated KV tokens (0
+        without block accounting): junk-gap and reserved-tail volume
+        inside leased pages."""
+        return self.kv_dead_tokens / self.kv_alloc_tokens \
+            if self.kv_alloc_tokens else 0.0
 
     @property
     def methods_served(self) -> List[str]:

@@ -12,6 +12,17 @@ Grid: (B, nkv, W/block_s), sequence innermost ("arbitrary").  The slot
 mask (slot < n_valid) handles both partially-filled caches and the rolling
 sliding-window layout (validity is a count, order is irrelevant under
 softmax since rope was applied before caching).
+
+PAGED variant (``flash_decode_paged``, DESIGN.md §2.3): K/V live in a
+node-wide block-pool arena of fixed ``block_tokens`` pages instead of one
+contiguous (B, W) slab.  The grid still walks LOGICAL sequence blocks;
+the physical page holding logical block j of row b is resolved per grid
+step through a scalar-prefetched block table — the index map reads
+``table[b, j]`` and the pipeline DMAs that page, so the kernel body is
+byte-for-byte the contiguous kernel with ``block_s = block_tokens``.
+Driven with a logical-order table over the same values it is therefore
+bit-identical to ``flash_decode`` at the same block size (the oracle the
+paged tests pin).
 """
 from __future__ import annotations
 
@@ -110,4 +121,99 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(nv, qg, k, v)
+    return out.reshape(B, nh, dh)
+
+
+def _paged_decode_kernel(nv_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, n_b: int, block_t: int):
+    """One (batch, kv-head) pair; grid axis 2 walks the LOGICAL blocks of
+    the row's block table.  The page indirection happened in the BlockSpec
+    index map (``tbl_ref[b, j]``), so k_ref/v_ref already hold the right
+    physical page — the body is the contiguous kernel at block_s=block_t.
+
+    q_ref:  (1, 1, G, dh)
+    k_ref:  (1, block_t, 1, dh)   physical page, logical block j
+    v_ref:  (1, block_t, 1, dh)
+    nv_ref: (B,) int32            valid-slot counts (scalar prefetch)
+    tbl_ref:(B, n_b) int32        block table (scalar prefetch)
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, dh = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32) * (1.0 / (dh ** 0.5))
+    k = k_ref[0, :, 0].astype(jnp.float32)                       # (bt, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, bt)
+    slot = j * block_t + jax.lax.broadcasted_iota(jnp.int32, (G, block_t), 1)
+    s = jnp.where(slot < nv_ref[pl.program_id(0)], s, NEG)
+
+    m_prev = m_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_b - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       table: jax.Array, n_valid: jax.Array, *,
+                       interpret: bool = False) -> jax.Array:
+    """GQA decode attention through a block table.
+
+    q: (B, nh, dh); k_pages/v_pages: (P, block_tokens, nkv, dh) — the
+    node-wide page arena; table: (B, n_b) int32, logical block j of row b
+    lives in physical page ``table[b, j]``; n_valid: scalar or (B,) valid
+    LOGICAL slot count.  Returns (B, nh, dh).
+    """
+    B, nh, dh = q.shape
+    P, bt, nkv, _ = k_pages.shape
+    n_b = table.shape[1]
+    G = nh // nkv
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+    tbl = jnp.asarray(table, jnp.int32)
+
+    qg = q.reshape(B, nkv, G, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nkv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh),
+                         lambda b, h, j, nv, tbl: (b, h, 0, 0)),
+            # page indirection: logical block j -> physical page tbl[b, j]
+            pl.BlockSpec((1, bt, 1, dh),
+                         lambda b, h, j, nv, tbl: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bt, 1, dh),
+                         lambda b, h, j, nv, tbl: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh),
+                               lambda b, h, j, nv, tbl: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, n_b=n_b, block_t=bt),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nkv, G, dh), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(nv, tbl, qg, k_pages, v_pages)
     return out.reshape(B, nh, dh)

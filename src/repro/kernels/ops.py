@@ -90,3 +90,27 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     out = _fd.flash_decode(q, k, v, jnp.asarray(n_valid, jnp.int32),
                            block_s=bs, interpret=INTERPRET)
     return out[..., :dh]
+
+
+@jax.jit
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       table: jax.Array, n_valid) -> jax.Array:
+    """GQA decode attention through a block table (DESIGN.md §2.3).
+
+    q (B, nh, dh) against a page arena k/v (P, block_tokens, nkv, dh);
+    table (B, n_b) int32 maps logical block j of row b to its physical
+    page.  Pads dh up to 128 lanes (with softmax-scale compensation, as
+    in ``flash_decode``); pages are fixed-size so no W padding is needed.
+    """
+    dh = q.shape[2]
+    if dh % 128:
+        dh_p = dh + (128 - dh % 128)
+        q = q * jnp.asarray((dh_p / dh) ** 0.5, q.dtype)
+        q = _pad_to(q, 2, 128)
+        k_pages = _pad_to(k_pages, 3, 128)
+        v_pages = _pad_to(v_pages, 3, 128)
+    out = _fd.flash_decode_paged(q, k_pages, v_pages,
+                                 jnp.asarray(table, jnp.int32),
+                                 jnp.asarray(n_valid, jnp.int32),
+                                 interpret=INTERPRET)
+    return out[..., :dh]

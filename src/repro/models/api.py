@@ -29,6 +29,10 @@ class Model:
     decode_step: Callable[[Params, Cache, jax.Array, jax.Array], Any]
     init_cache: Callable[[int, int], Cache]              # (batch, cache_len)
     input_specs: Callable[[ShapeConfig], Batch]          # ShapeDtypeStructs
+    # paged-KV decode (DESIGN.md §2.3): (params, pages, table, tokens,
+    # pos) -> (logits, new_pages); None for families without a slot-cache
+    # layout the block arena can virtualize (recurrent state, SWA).
+    decode_step_paged: Any = None
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -370,6 +370,81 @@ def decode_attention_cache(p: Params, cfg: ModelConfig, x: jax.Array,
         {"k": ck, "v": cv, "ks": ks, "vs": vs}
 
 
+def decode_attention_paged(p: Params, cfg: ModelConfig, x: jax.Array,
+                           pages: Dict[str, jax.Array], table: jax.Array,
+                           pos: jax.Array, use_kernel: bool = False
+                           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode step over a PAGED cache (DESIGN.md §2.3).
+
+    pages: one layer's slice of the node-wide arena — {"k","v"} of shape
+    (P, block_tokens, nkv', dh') (+ {"ks","vs"} (P, block_tokens, nkv')
+    scales when cfg.kv_bits == 8); table: (B, n_b) int32 mapping logical
+    block j of row b to its physical page.  Page tails may be LARGER
+    than this model's (nkv, dh) — the node pool provisions the max over
+    hosted cohorts — so every write targets and every read slices the
+    leading (nkv, dh) corner; the padding is zero-initialized and never
+    observed.  The token is written at page ``table[b, pos // bt]``
+    offset ``pos % bt``; attention then gathers the row's logical blocks
+    back into the (B, n_b*bt, nkv, dh) view — bitwise the contiguous
+    cache when the pages hold the same values, which is what makes the
+    paged engine path bit-identical to the slab path (rows whose table
+    points at the shared trash page are dead and never emit again, so
+    their garbage is unobservable).  ``use_kernel`` routes the read
+    through ``flash_decode_paged`` (no gather; TPU path, fp cache only).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k1, v1 = qkv_proj(p, cfg, x, positions)
+    nkv, dh = k1.shape[2], k1.shape[3]
+    bt = pages["k"].shape[1]
+    n_b = table.shape[1]
+    W = n_b * bt
+    # physical page holding this step's write block, per row
+    blk = (pos // bt).astype(jnp.int32)
+    page = jnp.take_along_axis(table, jnp.broadcast_to(blk, (B,))[:, None],
+                               axis=1)[:, 0]                     # (B,)
+    off = (pos % bt).astype(jnp.int32)
+
+    def gather(pleaf):
+        """Row-major view of a row's logical blocks, tail-sliced to this
+        model's geometry: (B, W, nkv[, dh])."""
+        g = pleaf[table]                     # (B, n_b, bt, *tail')
+        g = g[..., :nkv, :dh] if g.ndim == 5 else g[..., :nkv]
+        return g.reshape((B, W) + g.shape[3:])
+
+    if cfg.kv_bits == 8:
+        k1q, k1s = quantize_kv(k1)
+        v1q, v1s = quantize_kv(v1)
+        pk = pages["k"].at[page, off, :nkv, :dh].set(k1q[:, 0])
+        pv = pages["v"].at[page, off, :nkv, :dh].set(v1q[:, 0])
+        pks = pages["ks"].at[page, off, :nkv].set(k1s[:, 0])
+        pvs = pages["vs"].at[page, off, :nkv].set(v1s[:, 0])
+        new_pages = {"k": pk, "v": pv, "ks": pks, "vs": pvs}
+        dt = x.dtype
+        kd = dequantize_kv(gather(pk), gather(pks), dt)
+        vd = dequantize_kv(gather(pv), gather(pvs), dt)
+    else:
+        pk = pages["k"].at[page, off, :nkv, :dh].set(
+            k1[:, 0].astype(pages["k"].dtype))
+        pv = pages["v"].at[page, off, :nkv, :dh].set(
+            v1[:, 0].astype(pages["v"].dtype))
+        new_pages = {"k": pk, "v": pv}
+        kd = vd = None
+    n_valid = jnp.minimum(pos + 1, W)
+    if use_kernel and cfg.kv_bits != 8:
+        from repro.kernels import ops as kops
+        out = kops.flash_decode_paged(q[:, 0], pk[..., :nkv, :dh],
+                                      pv[..., :nkv, :dh], table, n_valid)
+        out = out[:, None]
+    else:
+        if kd is None:
+            kd, vd = gather(pk), gather(pv)
+        mask = (jnp.arange(W) < n_valid)[None, None, None, None, :]
+        out = gqa_attention(q, kd, vd, mask)
+    out = mm(out.reshape(B, 1, cfg.n_heads * cfg.d_head), p["wo"])
+    return constrain(out, "batch", None, None), new_pages
+
+
 def prefill_cache_from_kv(k: jax.Array, v: jax.Array, W: int
                           ) -> Tuple[jax.Array, jax.Array]:
     """Build the slot cache from prefill k/v (B, S, nkv, dh).

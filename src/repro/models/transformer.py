@@ -219,6 +219,39 @@ def decode_step(cfg: ModelConfig, params: Params, cache, tokens: jax.Array,
     return logits, new_cache
 
 
+def decode_step_paged(cfg: ModelConfig, params: Params, pages, table,
+                      tokens: jax.Array, pos: jax.Array,
+                      use_kernel: bool = False):
+    """One decode iteration over the PAGED cache (DESIGN.md §2.3).
+
+    ``pages``: arena leaves stacked over layers — {"k","v"} of shape
+    (L, P, block_tokens, nkv, dh) (+ scale leaves when kv_bits == 8);
+    ``table``: (B, n_b) int32 block table, shared by every layer (one
+    allocation covers all L layers of a row's block).  Scans layers over
+    axis 0 of both params and pages; the table is a scan-invariant
+    closure.  Returns (logits, new_pages)."""
+    x = common.maybe_dequant(params["embed"])[tokens]
+    x = constrain(x, "batch", None, None)
+
+    def body(x, inputs):
+        lp, layer_pages = inputs
+        h = common.apply_norm(cfg.norm, lp["norm1"], x)
+        att, layer_pages = common.decode_attention_paged(
+            lp["attn"], cfg, h, layer_pages, table, pos, use_kernel)
+        x = x + att
+        h = common.apply_norm(cfg.norm, lp["norm2"], x)
+        if cfg.is_moe:
+            out, _ = common.moe_apply(lp["moe"], cfg, h)
+        else:
+            out = common.ffn_apply(lp["ffn"], cfg, h)
+        return x + out, layer_pages
+
+    x, new_pages = jax.lax.scan(body, x, (params["layers"], pages))
+    x = common.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)[:, 0]
+    return logits, new_pages
+
+
 # ---------------------------------------------------------------------------
 # Input specs (ShapeDtypeStructs for the dry-run; no allocation)
 # ---------------------------------------------------------------------------
@@ -259,6 +292,7 @@ def make_model(cfg: ModelConfig) -> Model:
         loss_fn=functools.partial(loss_fn, cfg),
         prefill=functools.partial(prefill, cfg),
         decode_step=functools.partial(decode_step, cfg),
+        decode_step_paged=functools.partial(decode_step_paged, cfg),
         init_cache=functools.partial(init_cache, cfg),
         input_specs=functools.partial(input_specs, cfg),
     )

@@ -54,6 +54,8 @@ import numpy as np
 from repro.config import ModelConfig, get_arch
 from repro.models.api import Model, build_model
 from repro.quant.ptq import dequantize_tree, quantize_tree
+from repro.serving.kv_arena import (TRASH_PAGE, ZERO_PAGE, BlockTable,
+                                    KVArena)
 
 
 @dataclass
@@ -81,6 +83,33 @@ class DecodeState:
     ``out`` from 0 regardless of ``t``.
     """
     cache: Any                  # KV / recurrent cache, full batch capacity
+    cur: jax.Array              # (B,) next token to emit per row
+    out: jax.Array              # (B, n_max) emitted tokens per row
+    lengths: jax.Array          # (B,) emitted count per row
+    done: jax.Array             # (B,) bool, EOS seen
+    caps: jax.Array             # (B,) per-row output cap (0 = empty slot)
+    t: jax.Array                # scalar i32, cohort decode step
+    bits: int = 0               # weight precision this cohort is served at
+    caps_host: np.ndarray = None  # host mirror of caps (no sync needed)
+
+    @property
+    def batch_capacity(self) -> int:
+        return int(self.caps_host.shape[0])
+
+
+@dataclass
+class PagedDecodeState:
+    """Arena-backed sibling of :class:`DecodeState` (DESIGN.md §2.3).
+
+    The cohort's KV lives in its node-wide :class:`KVArena` — the state
+    holds no cache slab, only the cohort's :class:`BlockTable` and the
+    same per-row emission fields as ``DecodeState`` (so ``poll_chunked``
+    / ``exhausted`` work unchanged).  Rows lease pages from the arena at
+    admission and release them through ``ServingEngine.release_slots``
+    the moment they complete — which is what makes freed KV from any
+    cohort immediately reusable by any other cohort on the node."""
+    arena: KVArena
+    table: BlockTable
     cur: jax.Array              # (B,) next token to emit per row
     out: jax.Array              # (B, n_max) emitted tokens per row
     lengths: jax.Array          # (B,) emitted count per row
@@ -142,6 +171,17 @@ class ServingEngine:
                                      donate_argnums=seg_donate)
         self._refill_merge = jax.jit(self._refill_merge_fn,
                                      donate_argnums=(0,) if donate else ())
+        # paged path (DESIGN.md §2.3): the segment loop consumes the
+        # arena page buffers + per-row emission state; the block-scatter
+        # consumes the old pages AND the contiguous prefill cache it
+        # splices in
+        self._decode_chunk_paged = jax.jit(
+            self._decode_chunk_paged_fn,
+            donate_argnums=(1, 3, 4, 5, 6) if donate else ())
+        self._page_scatter = jax.jit(
+            self._page_scatter_fn,
+            donate_argnums=(0, 1) if donate else ())
+        self._refill_rows = jax.jit(self._refill_rows_fn)
         self._cache_axes = None              # per-leaf batch axis (lazy)
 
     # -- multi-precision weight cache ---------------------------------------
@@ -299,6 +339,75 @@ class ServingEngine:
         caps = jnp.where(refill, new_caps, caps)
         return cache, cur, out, lengths, done, caps
 
+    # -- paged-arena compiled step functions (DESIGN.md §2.3) ----------------
+
+    def _decode_chunk_paged_fn(self, params, pages, table, cur, out,
+                               lengths, done, caps, t, t_end):
+        """The re-entrant decode segment over the PAGED cache: identical
+        per-step ops to ``_decode_chunk_fn`` but the KV reads/writes go
+        through ``model.decode_step_paged`` — the node-wide page buffers
+        are the carried cache and the cohort's block table (static within
+        a segment; rows only change at admission/release boundaries) is
+        an operand."""
+        B = cur.shape[0]
+        rows = jnp.arange(B)
+
+        def alive_mask(done, lengths):
+            return (~done) & (lengths < caps)
+
+        def cond(state):
+            _, _, _, lengths, done, t = state
+            return (t < t_end) & jnp.any(alive_mask(done, lengths))
+
+        def body(state):
+            pages, cur, out, lengths, done, t = state
+            alive = alive_mask(done, lengths)
+            idx = jnp.minimum(lengths, self.n_max - 1)
+            out = out.at[rows, idx].set(
+                jnp.where(alive, cur, out[rows, idx]))
+            lengths = lengths + alive.astype(jnp.int32)
+            done = done | ((cur == self.eos_id) & alive)
+            logits, pages = self.model.decode_step_paged(
+                params, pages, table, cur[:, None], self.s_max + t)
+            cur = jnp.argmax(logits[..., :self.cfg.vocab],
+                             -1).astype(jnp.int32)
+            return pages, cur, out, lengths, done, t + 1
+
+        state = (pages, cur, out, lengths, done, t)
+        return jax.lax.while_loop(cond, body, state)
+
+    def _page_scatter_fn(self, pages, cache, ids):
+        """Splice a contiguous prefill cache into the arena, block-wise.
+
+        ``ids`` is (B * n_blocks,) int32: the physical page receiving
+        logical block (b, j) — ``TRASH_PAGE`` for rows/blocks that were
+        not (re)filled, so their scatter lands in the don't-care page
+        (duplicate trash indices are benign: nothing live reads it).
+        Page tails can exceed this engine's cache tail (node pool sized
+        to the max over cohorts) — the scatter fills only the leading
+        corner, matching the reads in ``decode_attention_paged``."""
+        out = {}
+        for name, pleaf in pages.items():
+            cleaf = cache[name]
+            L, B, W = cleaf.shape[:3]
+            bt = pleaf.shape[2]
+            vals = cleaf.reshape((L, B * (W // bt), bt) + cleaf.shape[3:])
+            idx = (slice(None), ids, slice(None)) \
+                + tuple(slice(0, d) for d in vals.shape[3:])
+            out[name] = pleaf.at[idx].set(vals.astype(pleaf.dtype))
+        return out
+
+    def _refill_rows_fn(self, cur, new_cur, out, lengths, done, caps,
+                        new_caps, refill):
+        """Per-row emission-state splice of a paged refill (the cache
+        splice happened in ``_page_scatter_fn``)."""
+        cur = jnp.where(refill, new_cur, cur)
+        out = jnp.where(refill[:, None], 0, out)
+        lengths = jnp.where(refill, 0, lengths)
+        done = jnp.where(refill, False, done)
+        caps = jnp.where(refill, new_caps, caps)
+        return cur, out, lengths, done, caps
+
     # -- public API ----------------------------------------------------------
 
     def synth_prompts(self, requests: Sequence, rng: np.random.Generator):
@@ -412,38 +521,118 @@ class ServingEngine:
 
     # -- chunked (re-entrant) decode: the continuous-batching data plane ----
 
+    @property
+    def paged_capable(self) -> bool:
+        """Whether this engine's family can serve through a paged KV
+        arena: a slot-cache layout with no rolling sliding window (page
+        identity must be position-stable) and a paged decode step.  MoE
+        is excluded: capacity dispatch couples rows, so a released row's
+        trash-page garbage could perturb live rows' expert routing — the
+        per-row independence the bit-exactness contract relies on."""
+        return self.model.decode_step_paged is not None \
+            and not self.cfg.sliding_window and not self.cfg.is_moe
+
+    def pages_for_admission(self, t: int, block_tokens: int) -> int:
+        """Worst-case pages one row admitted at cohort step ``t`` needs.
+
+        Cohort-shared write position: every resident row writes every
+        step until the cohort ends at ``n_max``, so the reservation must
+        cover the prompt blocks plus every block from the row's first
+        write block through the end of the cache — only the fully-dead
+        junk-gap blocks ``[ceil(s_max/bt), (s_max+t)//bt)`` (mapped to
+        the shared zero page) cost nothing.  ``accepts`` gates admission
+        on this so a leased row never needs a mid-segment allocation."""
+        nb = self.cache_len // block_tokens
+        if t <= 0:
+            return nb
+        npb = -(-self.s_max // block_tokens)
+        b_w = min((self.s_max + t) // block_tokens, nb - 1)
+        return nb - max(0, b_w - npb)
+
     def start_chunked(self, prompts: Sequence[Sequence[int]],
                       n_tokens: Optional[Sequence[int]] = None,
-                      quant_bits: Optional[int] = None) -> DecodeState:
+                      quant_bits: Optional[int] = None,
+                      arena: Optional[KVArena] = None):
         """Prefill a new cohort and return its device-resident decode
         state (ONE host→device transfer; decoding hasn't started).
         Prompts occupy slots ``0..len(prompts)-1``; the remaining slots
-        are empty (cap 0) and refillable."""
+        are empty (cap 0) and refillable.  With ``arena=`` the cohort is
+        arena-backed: the prefill cache is scattered block-wise into
+        leased pages and a :class:`PagedDecodeState` is returned."""
         params, bits, batch, caps_j, caps, _ = self._prepare(
             prompts, n_tokens, quant_bits)
         cur, cache = self._prefill(params, batch)
         B = self.batch_capacity
-        return DecodeState(
-            cache=cache, cur=cur,
+        if arena is None:
+            return DecodeState(
+                cache=cache, cur=cur,
+                out=jnp.zeros((B, self.n_max), jnp.int32),
+                lengths=jnp.zeros((B,), jnp.int32),
+                done=jnp.zeros((B,), bool),
+                caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps)
+        assert self.paged_capable, self.cfg.arch_id
+        bt = arena.block_tokens
+        assert self.cache_len % bt == 0, (self.cache_len, bt)
+        nb = self.cache_len // bt
+        table = BlockTable(B, nb)
+        ids = np.full((B * nb,), TRASH_PAGE, np.int32)
+        for b in range(B):
+            if caps[b] > 0:
+                leases = arena.alloc(nb)
+                table.set_row(b, leases)
+                ids[b * nb:(b + 1) * nb] = leases
+        pages = self._page_scatter(arena.buffers(), cache,
+                                   jax.device_put(ids))
+        arena.set_buffers(pages)
+        return PagedDecodeState(
+            arena=arena, table=table, cur=cur,
             out=jnp.zeros((B, self.n_max), jnp.int32),
             lengths=jnp.zeros((B,), jnp.int32),
             done=jnp.zeros((B,), bool),
             caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps)
 
-    def generate_chunked(self, state: DecodeState, k: int) -> DecodeState:
+    def generate_chunked(self, state, k: int):
         """Advance a cohort by AT MOST ``k`` decode steps (one jitted
         re-entrant while-loop segment, no host transfer) and return the
         re-entrant state.  The input state is consumed (donated on
         backends that support it).  Driven to completion this is
         bit-identical to the single fused loop for any k (see
-        tests/test_continuous_engine.py)."""
+        tests/test_continuous_engine.py).  A :class:`PagedDecodeState`
+        advances through the paged segment loop — the arena page buffers
+        are checked out, carried through the while-loop, and checked
+        back in."""
         params = self.params_for(state.bits)
         t_end = jnp.minimum(state.t + jnp.int32(k), jnp.int32(self.n_max))
+        if isinstance(state, PagedDecodeState):
+            pages, cur, out, lengths, done, t = self._decode_chunk_paged(
+                params, state.arena.buffers(), state.table.device,
+                state.cur, state.out, state.lengths, state.done,
+                state.caps, state.t, t_end)
+            state.arena.set_buffers(pages)
+            return dataclasses.replace(state, cur=cur, out=out,
+                                       lengths=lengths, done=done, t=t)
         cache, cur, out, lengths, done, t = self._decode_chunk(
             params, state.cache, state.cur, state.out, state.lengths,
             state.done, state.caps, state.t, t_end)
         return dataclasses.replace(state, cache=cache, cur=cur, out=out,
                                    lengths=lengths, done=done, t=t)
+
+    def release_slots(self, state: PagedDecodeState,
+                      slots: Sequence[int]) -> PagedDecodeState:
+        """Return completed rows' page leases to the arena and remap
+        their table rows to the trash page (their continued writes — dead
+        rows keep stepping, exactly like the slab path — become
+        don't-care scatters no live row reads).  Freed pages are
+        allocatable by ANY cohort at the very next admission boundary."""
+        for slot in slots:
+            state.arena.free(state.table.row_leases(slot))
+            state.table.clear_row(slot)
+        return state
+
+    def release_all(self, state: PagedDecodeState) -> PagedDecodeState:
+        """Release every leased page of a drained cohort."""
+        return self.release_slots(state,
+                                  range(state.table.host.shape[0]))
 
     def poll_chunked(self, state: DecodeState, with_tokens: bool = True):
         """Read a cohort's progress back to the host: ONE device→host
@@ -472,10 +661,10 @@ class ServingEngine:
         emit before the shared cache position hits capacity."""
         return max(0, self.n_max - t)
 
-    def refill_chunked(self, state: DecodeState, slots: Sequence[int],
+    def refill_chunked(self, state, slots: Sequence[int],
                        prompts: Sequence[Sequence[int]],
                        n_tokens: Sequence[int], t_now: int,
-                       cap_max: Optional[int] = None) -> DecodeState:
+                       cap_max: Optional[int] = None):
         """Prefill new prompts into freed slots of a LIVE cohort.
 
         The new prompts are padded into their slot rows, prefilled as one
@@ -484,16 +673,20 @@ class ServingEngine:
         ``_refill_merge`` so live rows keep decoding untouched.  A
         refilled row's cap is clamped to ``headroom(t_now)`` so its cache
         writes stay inside ``s_max + n_max``; callers gate admission on
-        that headroom.  ``cap_max`` tightens the clamp further — a
-        multi-engine node passes the MINIMUM remaining headroom across
-        every live cohort it hosts, since the shared provisioning window
-        the admission oracle validated against ends when the
-        most-advanced cohort exhausts (see
-        ``EngineContinuousExecutor.node_headroom``).  Cache slots between
-        a refilled row's prompt and the cohort's current position hold
-        zero K/V — junk attention positions of the same class as the
-        engine's padded prompts (the paper's s' padding);
-        recurrent-state families have no such gap.
+        that headroom.  ``cap_max`` tightens the clamp further (an
+        explicit caller-side bound; admission control normally makes it
+        redundant with the cohort's own headroom).  When the clamp
+        bottoms out at 0 — or ``slots`` is empty — the refill is a
+        NO-OP returning ``state`` untouched: prefilling rows that could
+        never emit would occupy slots until drain for nothing.  Cache
+        slots between a refilled row's prompt and the cohort's current
+        position hold zero K/V — junk attention positions of the same
+        class as the engine's padded prompts (the paper's s' padding);
+        recurrent-state families have no such gap.  For a
+        :class:`PagedDecodeState` the splice is block-wise: fresh pages
+        are leased for the prompt blocks and the not-yet-written tail,
+        while the fully-dead junk-gap blocks map to the shared zero page
+        and cost no physical memory (DESIGN.md §2.3).
         """
         B = self.batch_capacity
         params = self.params_for(state.bits)
@@ -503,6 +696,8 @@ class ServingEngine:
         cap_lim = min(self.n_max, self.headroom(t_now))
         if cap_max is not None:
             cap_lim = min(cap_lim, max(0, int(cap_max)))
+        if not slots or cap_lim <= 0:
+            return state
         for slot, p, n in zip(slots, prompts, n_tokens):
             p = list(p)[-self.s_max:]
             if p:
@@ -511,10 +706,34 @@ class ServingEngine:
             refill[slot] = True
         toks_j, caps_j, refill_j = jax.device_put((toks, new_caps, refill))
         new_cur, new_cache = self._prefill(params, self._as_batch(toks_j))
+        caps_host = np.where(refill, new_caps, state.caps_host)
+        if isinstance(state, PagedDecodeState):
+            arena = state.arena
+            bt = arena.block_tokens
+            nb = self.cache_len // bt
+            npb = -(-self.s_max // bt)
+            b_w = min((self.s_max + int(t_now)) // bt, nb - 1)
+            ids = np.full((B * nb,), TRASH_PAGE, np.int32)
+            for slot in slots:
+                arena.free(state.table.row_leases(slot))  # stale leases
+                blocks = list(range(npb)) + list(range(max(npb, b_w), nb))
+                leases = arena.alloc(len(blocks))
+                row = np.full((nb,), ZERO_PAGE, np.int32)
+                row[blocks] = leases
+                state.table.set_row(slot, row)
+                ids[slot * nb + np.asarray(blocks)] = leases
+            pages = self._page_scatter(arena.buffers(), new_cache,
+                                       jax.device_put(ids))
+            arena.set_buffers(pages)
+            cur, out, lengths, done, caps = self._refill_rows(
+                state.cur, new_cur, state.out, state.lengths, state.done,
+                state.caps, caps_j, refill_j)
+            return dataclasses.replace(state, cur=cur, out=out,
+                                       lengths=lengths, done=done,
+                                       caps=caps, caps_host=caps_host)
         cache, cur, out, lengths, done, caps = self._refill_merge(
             state.cache, new_cache, state.cur, new_cur, state.out,
             state.lengths, state.done, state.caps, caps_j, refill_j)
-        caps_host = np.where(refill, new_caps, state.caps_host)
         return dataclasses.replace(state, cache=cache, cur=cur, out=out,
                                    lengths=lengths, done=done, caps=caps,
                                    caps_host=caps_host)
@@ -522,18 +741,24 @@ class ServingEngine:
     def generate_via_chunks(self, prompts: Sequence[Sequence[int]],
                             n_tokens: Optional[Sequence[int]] = None,
                             k: Optional[int] = None,
-                            quant_bits: Optional[int] = None
+                            quant_bits: Optional[int] = None,
+                            arena: Optional[KVArena] = None
                             ) -> GenerationResult:
         """Drive ``start_chunked`` + ``generate_chunked`` segments to
         completion — the equivalence harness against ``generate`` /
-        ``generate_reference`` (one device→host poll per segment)."""
+        ``generate_reference`` (one device→host poll per segment).  With
+        ``arena=`` the cohort runs arena-backed (and its pages are
+        released on completion) — the paged-vs-slab equivalence oracle."""
         k = self.n_max if k is None else k
-        state = self.start_chunked(prompts, n_tokens, quant_bits)
+        state = self.start_chunked(prompts, n_tokens, quant_bits,
+                                   arena=arena)
         while True:
             state = self.generate_chunked(state, k)
             out, lengths, done, t = self.poll_chunked(state)
             if self.exhausted(lengths, done, state.caps_host, t):
                 break
+        if arena is not None:
+            self.release_all(state)
         nb = len(prompts)
         return GenerationResult(tokens=out[:nb], lengths=lengths[:nb],
                                 batch=nb)

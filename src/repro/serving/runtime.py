@@ -366,6 +366,20 @@ class ContinuousExecutor:
         return all(not p["resident"] and not p["pending"]
                    for p in self._pools.values())
 
+    def block_usage(self) -> Tuple[int, int, int, int]:
+        """KV-block accounting snapshot, recorded by the runtime after
+        every segment: ``(blocks_in_use, blocks_total, live_tokens,
+        alloc_tokens)``.  Data planes without a physical block pool
+        (analytic, slab engines) report slot-level occupancy — one
+        "block" per resident request against the node's slot capacity,
+        with no token accounting (0, 0).  The arena-backed engine
+        executor overrides this with true page counts, and
+        ``alloc_tokens - live_tokens`` is the allocated-but-dead volume
+        behind ``EpochMetrics.fragmentation``."""
+        occupied = sum(len(p["resident"]) for p in self._pools.values())
+        capacity = sum(p["capacity"] for p in self._pools.values())
+        return occupied, capacity, 0, 0
+
     # -- per-cohort quantization lifecycle -----------------------------------
 
     def set_quant(self, mid: Optional[str],
@@ -467,11 +481,14 @@ class EngineContinuousExecutor(ContinuousExecutor):
     ``engines`` is one engine or a ``{model_id: ServingEngine}`` dict
     keyed like the hosted ``MultiLLMEnv`` (mirroring ``EngineExecutor``)
     — ONE device-resident cohort per hosted engine, all advancing on the
-    node's shared segment grid.  Refill caps are clamped to
-    ``node_headroom``: the MINIMUM remaining headroom across the node's
-    live cohorts, since the shared provisioning window the joint
-    admission oracle validated against ends when the most-advanced
-    cohort exhausts and forces a re-admission point.
+    node's shared segment grid.  Refill caps are clamped to the target
+    cohort's OWN remaining headroom (``node_headroom``); cross-cohort
+    memory pressure is expressed through the paged KV ``arena`` when one
+    is attached — each admission must reserve its worst-case pages from
+    the node-wide pool, and pages released by ANY cohort's completed
+    rows are immediately allocatable by every other (the historical
+    min-headroom clamp that let one long-running cohort throttle every
+    model's admission is gone; DESIGN.md §2.3).
 
     Each cohort's served precision is the runtime-decided method
     (``set_quant``, from ``policy.select_quant`` at cohort start) via
@@ -484,13 +501,18 @@ class EngineContinuousExecutor(ContinuousExecutor):
 
     def __init__(self, engines, rng: Optional[np.random.Generator] = None,
                  seed: int = 0, quant_bits: Optional[int] = None,
-                 collect_tokens: bool = False):
+                 collect_tokens: bool = False, arena=None):
         super().__init__()
         if not isinstance(engines, dict):
             engines = {None: engines}
         self.engines = engines
         self.rng = rng if rng is not None else np.random.default_rng(seed)
         self.quant_bits = quant_bits
+        # node-wide paged KV arena (serving/kv_arena.py): pools whose
+        # engine can serve paged run arena-backed cohorts, admission
+        # gated by page reservation instead of the min-headroom clamp
+        self.arena = arena
+        self._pending_pages = 0
         # rid -> generated token ids, filled at completion when enabled
         # (one full poll per segment instead of the light occupancy poll
         # — equivalence tests only; leave off on the hot path)
@@ -503,7 +525,10 @@ class EngineContinuousExecutor(ContinuousExecutor):
                 f"no ServingEngine bound for hosted model {mid!r}; "
                 f"executor hosts {sorted(map(str, self.engines))}")
         pool = super()._make_pool(mid)
-        pool.update(engine=self.engines[mid], state=None, t=0)
+        eng = self.engines[mid]
+        paged = self.arena is not None and eng.paged_capable \
+            and eng.cache_len % self.arena.block_tokens == 0
+        pool.update(engine=eng, state=None, t=0, paged=paged)
         return pool
 
     def _capacity(self, mid) -> int:
@@ -528,30 +553,63 @@ class EngineContinuousExecutor(ContinuousExecutor):
         return q.weight_bits if q is not None else self.quant_bits
 
     def node_headroom(self, mid) -> int:
-        """Output tokens a refill into ``mid`` can be promised: bounded
-        by the target engine's ``n_max`` AND by every live cohort's
-        remaining cache headroom — on a shared node the cohorts advance
-        in lock-step, so the provisioning window closes when the
-        most-advanced cohort exhausts, whichever pool it lives in.
-        (With a single pool this reduces to the pool's own headroom.)"""
-        live = [p["engine"].headroom(p["t"])
-                for p in self._pools.values() if p["state"] is not None]
-        return min([self.engines[mid].n_max] + live)
+        """Output tokens a refill into ``mid`` can be promised: the
+        target pool's OWN cohort headroom (``n_max`` for a fresh
+        cohort).  Historically this was clamped to the MINIMUM headroom
+        across every live cohort on the node — a blunt provisioning
+        proxy under which one long-running cohort throttled every
+        model's admission.  The paged arena replaced that proxy with
+        true per-block accounting: cross-cohort memory pressure is now
+        expressed as page reservations (``accepts`` asks the arena
+        whether the candidate's worst-case pages fit), and the paper's
+        joint constraints stay with the authoritative ``multi_feasible``
+        oracle at admission — so another cohort's AGE no longer caps
+        this cohort's refill promises (DESIGN.md §2.3)."""
+        pool = self._pools[mid]
+        eng = self.engines[mid]
+        return eng.n_max if pool["state"] is None \
+            else eng.headroom(pool["t"])
+
+    def _pages_needed(self, mid, fresh_rows: int = 1) -> int:
+        """Worst-case arena pages one admission into ``mid`` reserves at
+        the next boundary (0 for slab pools)."""
+        pool = self._pools[mid]
+        if not pool.get("paged"):
+            return 0
+        eng = pool["engine"]
+        t = 0 if pool["state"] is None else pool["t"]
+        return eng.pages_for_admission(t, self.arena.block_tokens) \
+            * fresh_rows
 
     def accepts(self, mid, r) -> bool:
         if not super().accepts(mid, r):
             return False
         pool = self._pools[mid]
+        if pool.get("paged"):
+            # per-block admission: can this request's worst-case pages
+            # be reserved, on top of boundary admissions already
+            # pending?  (The multi_feasible oracle stays authoritative
+            # for the paper's constraints — this gates physical KV.)
+            need = self._pages_needed(mid)
+            if self.arena.free_pages - self._pending_pages < need:
+                return False
         if pool["state"] is None:
             return True     # fresh cohort: full n_max headroom of its own
         return self.node_headroom(mid) >= min(r.n, pool["engine"].n_max)
 
+    def place(self, mid, r):
+        # reserve the candidate's worst-case pages against this boundary
+        # so a burst of same-boundary admissions can't jointly overdraw
+        # the arena (released again once the refill actually leases)
+        self._pending_pages += self._pages_needed(mid)
+        super().place(mid, r)
+
     def step(self, env, k):
         finished, occupied, capacity = [], 0, 0
         # Refill clamps are computed BEFORE any pool mutates — the same
-        # headroom view admission was gated on at this boundary, so an
-        # accepted candidate can never be silently truncated by another
-        # pool starting or advancing earlier in the dict order.
+        # headroom view admission was gated on at this boundary (each
+        # pool's OWN cohort headroom; the historical cross-pool MIN
+        # clamp is gone — see ``node_headroom``).
         clamps = {mid: self.node_headroom(mid)
                   for mid, pool in self._pools.items()
                   if pool["pending"] and pool["state"] is not None}
@@ -563,7 +621,8 @@ class EngineContinuousExecutor(ContinuousExecutor):
                 prompts, caps = eng.synth_prompts(reqs, self.rng)
                 if pool["state"] is None:
                     pool["state"] = eng.start_chunked(
-                        prompts, caps, quant_bits=self._cohort_bits(pool))
+                        prompts, caps, quant_bits=self._cohort_bits(pool),
+                        arena=self.arena if pool["paged"] else None)
                     pool["t"] = 0
                 else:
                     pool["state"] = eng.refill_chunked(
@@ -571,6 +630,7 @@ class EngineContinuousExecutor(ContinuousExecutor):
                         t_now=pool["t"], cap_max=clamps[mid])
                 pool["resident"].update(zip(slots, reqs))
                 pool["pending"].clear()
+        self._pending_pages = 0     # reservations became real leases
         for mid, pool in self._pools.items():
             eng = pool["engine"]
             occupied += len(pool["resident"])
@@ -584,6 +644,7 @@ class EngineContinuousExecutor(ContinuousExecutor):
                 pool["state"], with_tokens=self.collect_tokens)
             pool["t"] = t
             caps_h = pool["state"].caps_host
+            freed = []
             for slot, r in list(pool["resident"].items()):
                 if done[slot] or lengths[slot] >= caps_h[slot]:
                     finished.append((mid, r, int(lengths[slot])))
@@ -591,9 +652,30 @@ class EngineContinuousExecutor(ContinuousExecutor):
                         self.outputs[r.rid] = \
                             np.array(out[slot][:lengths[slot]])
                     del pool["resident"][slot]
+                    freed.append(slot)
+            if pool["paged"] and freed:
+                # release-on-completion: the freed pages are allocatable
+                # by ANY cohort at the next admission boundary
+                pool["state"] = eng.release_slots(pool["state"], freed)
             if not pool["resident"]:
+                if pool["paged"]:
+                    eng.release_all(pool["state"])
                 pool["state"], pool["t"] = None, 0   # cohort drained
         return finished, occupied / capacity if capacity else 0.0
+
+    def block_usage(self):
+        if self.arena is None:
+            return super().block_usage()
+        bt = self.arena.block_tokens
+        live_tokens = 0
+        for pool in self._pools.values():
+            if pool.get("paged") and pool["state"] is not None:
+                eng = pool["engine"]
+                live_tokens += len(pool["resident"]) \
+                    * (eng.s_max + pool["t"])
+        alloc_tokens = self.arena.pages_in_use * bt
+        return (self.arena.pages_in_use, self.arena.total_pages,
+                live_tokens, alloc_tokens)
 
 
 class ContinuousRuntime(EpochRuntime):
@@ -718,6 +800,18 @@ class ContinuousRuntime(EpochRuntime):
             self._assert_jointly_feasible(batches, quants)
         return admitted
 
+    def _record_blocks(self, counting: bool, m: EpochMetrics,
+                       trace: EpochTrace) -> None:
+        """Per-segment KV-block accounting (DESIGN.md §2.3): the
+        executor's ``block_usage`` snapshot feeds the trace's in-use
+        series and the run-level occupancy/fragmentation aggregates."""
+        in_use, total, live_tok, alloc_tok = self.cexec.block_usage()
+        trace.kv_blocks_in_use.append(in_use)
+        trace.kv_blocks_total = total
+        if counting:
+            m.kv_alloc_tokens += alloc_tok
+            m.kv_dead_tokens += max(0, alloc_tok - live_tok)
+
     def _record_finished(self, finished: Sequence, counting: bool,
                          m: EpochMetrics, trace: EpochTrace) -> None:
         for mid, r, tokens in finished:
@@ -782,6 +876,7 @@ class ContinuousRuntime(EpochRuntime):
                 trace.wall_s += time.perf_counter() - t0
                 trace.segments += 1
                 trace.occupancy.append(occ)
+                self._record_blocks(counting, m, trace)
                 if counting:
                     m.segments += 1
                 self._record_finished(finished, counting, m, trace)
@@ -803,6 +898,7 @@ class ContinuousRuntime(EpochRuntime):
             trace.wall_s += wall
             trace.segments += 1
             trace.occupancy.append(occ)
+            self._record_blocks(counting, m, trace)
             if counting:
                 m.segments += 1
                 m.wall_s += wall

@@ -193,8 +193,8 @@ def test_refill_caps_clamp_to_cohort_headroom(engine):
 
 
 def test_refill_cap_max_tightens_headroom_clamp(engine):
-    """``cap_max`` (the shared-node minimum-headroom clamp) binds below
-    the cohort's own headroom; caps_host mirrors the clamped value."""
+    """An executor-supplied ``cap_max`` binds below the cohort's own
+    headroom; caps_host mirrors the clamped value."""
     state = engine.start_chunked([[1, 2, 3]], n_tokens=[8])
     state = engine.generate_chunked(state, 2)
     _, _, _, t = engine.poll_chunked(state)
@@ -206,6 +206,23 @@ def test_refill_cap_max_tightens_headroom_clamp(engine):
     state2 = engine.refill_chunked(state, [3], [[6]], [8], t_now=t,
                                    cap_max=engine.n_max * 2)
     assert state2.caps_host[3] == min(8, engine.headroom(t))
+
+
+def test_refill_cap_max_zero_is_noop(engine):
+    """``cap_max=0`` (or a fully exhausted cohort window) must leave the
+    state UNTOUCHED — no slot splice, no cap update, same object back.
+    Regression: the historical path spliced a zero-cap row in, burning
+    the slot on a request that could never emit."""
+    state = engine.start_chunked([[1, 2, 3]], n_tokens=[8])
+    state = engine.generate_chunked(state, 2)
+    _, _, _, t = engine.poll_chunked(state)
+    before = np.asarray(state.caps_host).copy()
+    out = engine.refill_chunked(state, [2], [[5, 5]], [8], t_now=t,
+                                cap_max=0)
+    assert out is state
+    assert np.array_equal(np.asarray(out.caps_host), before)
+    # empty slot list short-circuits the same way
+    assert engine.refill_chunked(state, [], [], [], t_now=t) is state
 
 
 # -- multi-engine pool: interleaved cohorts stay bit-identical ----------------

@@ -11,8 +11,10 @@ every ``multi-dftsp`` spec variant (orders, pinned method, and
 On top: admission on a ``MultiLLMEnv`` is gated by the authoritative
 joint ``multi_feasible`` oracle (a per-model-only validate() raises
 ``InfeasibleDecisionError``, it does not serve), and refills into a
-shared node clamp to the MINIMUM remaining headroom across the node's
-live cohorts.
+shared node clamp to the target cohort's OWN remaining headroom — the
+historical cross-cohort MIN clamp is gone (paged-arena PR; cross-cohort
+memory pressure now lives in per-block admission, tests in
+test_kv_arena.py).
 """
 from __future__ import annotations
 
@@ -230,11 +232,12 @@ def node_engines():
             for arch in ("bloom-3b", "bloom-7b1")}
 
 
-def test_refill_clamp_pins_min_headroom_across_cohorts(node_engines):
-    """Regression for the shared-node clamp: a refill into cohort B must
-    be capped by cohort A's remaining headroom (the node's provisioning
-    window), not B's own — crafted state: A at t=5, B at t=2, n_max=8
-    => clamp is 3, not 6."""
+def test_refill_headroom_is_per_cohort_not_node_min(node_engines):
+    """Regression for the min-headroom clamp REMOVAL: a refill into
+    cohort B is bounded by B's OWN remaining headroom, and another
+    cohort's age no longer throttles it — crafted state: A at t=5, B at
+    t=2, n_max=8 => B's window is 6 (its own 8-2), NOT the old node-min
+    of 3 (A's 8-5)."""
     ea, eb = node_engines["bloom-3b"], node_engines["bloom-7b1"]
     ex = EngineContinuousExecutor(node_engines, seed=0)
     menv = make_menv(2)
@@ -248,17 +251,23 @@ def test_refill_clamp_pins_min_headroom_across_cohorts(node_engines):
     pa["resident"][0] = ra
     pb["state"], pb["t"] = eb.start_chunked([[4, 5]], [8]), 2
     pb["resident"][0] = rb
-    assert ex.node_headroom("bloom-7b1") == 3        # min(8-5, 8-2, 8)
-    assert ex.node_headroom("bloom-3b") == 3
+    assert ex.node_headroom("bloom-7b1") == 6        # own 8-2, NOT min 3
+    assert ex.node_headroom("bloom-3b") == 3         # own 8-5
 
-    # admission refuses a candidate the clamp would truncate...
+    # the long-running cohort A no longer blocks B's admission: a
+    # candidate that fits B's own window (n=6 <= 6) is accepted even
+    # though A's remaining headroom is only 3...
+    fits_b = Request(rid=3, s=2, n=6, tau=50.0, a=0.0, h=1.0,
+                     model_id="bloom-7b1")
+    assert ex.accepts("bloom-7b1", fits_b)
+    # ...while one that overruns B's own window is still refused
     hungry = Request(rid=2, s=2, n=8, tau=50.0, a=0.0, h=1.0,
                      model_id="bloom-7b1")
     assert not ex.accepts("bloom-7b1", hungry)
-    # ...and the clamp itself is defense in depth: force the refill
+    # the clamp itself is defense in depth: force the refill anyway
     ex.place("bloom-7b1", hungry)
     ex.step(menv, 1)
-    assert pb["state"].caps_host[1] == 3             # pinned: min headroom
+    assert pb["state"].caps_host[1] == 6             # pinned: OWN headroom
 
 
 def test_fresh_cohort_keeps_full_headroom(node_engines):
