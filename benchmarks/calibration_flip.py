@@ -1,0 +1,112 @@
+"""Calibration flip: Table-II coefficients vs measured-beta coefficients.
+
+The paper's scheduler prices quantization with offline Table-II numbers
+(W8A8 beta=0.7: int8 compute is ~1.4x faster than fp16 on the paper's
+Jetson testbed).  This repo can instead MEASURE alpha/beta on the very
+engine that will serve the decision (``quant.calibration.measure_beta``)
+and feed the measured coefficients into every ``quant=auto`` descent.
+
+This benchmark demonstrates that the feedback loop is not a no-op: on a
+backend where W8A8 does NOT pay (e.g. CPU interpret mode, where the
+engine dequantizes at load and all methods time at parity), the measured
+betas snap to the same grid cell, W8A16 Pareto-dominates W8A8 on dPPL,
+and ``dftsp_schedule_auto`` picks a different method for the SAME queue
+than it does under Table II.
+
+Emits ``experiments/benchmarks/calibration_flip.json``.  The committed
+artifact carries the full ``measure_beta`` record (betas + measured
+alphas), so ``tests/test_calibration.py`` can rebuild the measured
+method set from JSON alone — no re-timing — and pin the flip forever.
+
+  PYTHONPATH=src python -m benchmarks.calibration_flip [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import render, save_table
+from repro.config import get_arch
+from repro.core.dftsp import dftsp_schedule_auto
+from repro.core.environment import paper_env
+from repro.core.quantization import METHODS
+from repro.core.request import RequestGenerator
+from repro.quant.calibration import (attach_alphas, measure_beta,
+                                     measured_methods)
+from repro.serving.engine import ServingEngine
+
+ARCH = "bloom-3b"
+REDUCED = dict(n_layers=1, d_model=64, n_heads=2, n_kv_heads=2,
+               d_ff=128, vocab=256)
+S_MAX, N_MAX = 16, 32
+QUEUE_SEEDS = [0, 1, 2]
+QUEUE_RATE, QUEUE_HORIZON = 25.0, 2.0
+
+
+def make_queue(seed: int):
+    """Deterministic request queue over the paper's length/accuracy mix."""
+    gen = RequestGenerator(rate=QUEUE_RATE, seed=seed)
+    return gen.within(0.0, QUEUE_HORIZON)
+
+
+def decide(env, queue, methods=None):
+    batch, method, _ = dftsp_schedule_auto(env, queue, methods=methods)
+    return method.name, len(batch)
+
+
+def run(fast: bool = False, seed: int = 0, quiet: bool = False):
+    batches = (4,) if fast else (1, 4, 8)
+    iters = 2 if fast else 3
+
+    cfg = get_arch(ARCH).scaled(**REDUCED)
+    eng = ServingEngine(cfg, batch_capacity=max(batches), s_max=S_MAX,
+                        n_max=N_MAX, eos_id=-1, seed=seed)
+    record = measure_beta(eng, methods=list(METHODS.values()),
+                          batches=batches, iters=iters,
+                          n_tokens=N_MAX // 2, prompt_len=S_MAX // 2,
+                          seed=seed)
+    attach_alphas(record, eng._raw_params)
+    measured = measured_methods(record)
+
+    env = paper_env(ARCH, "W8A16")
+    rows = []
+    for qseed in QUEUE_SEEDS:
+        queue = make_queue(qseed)
+        t2_name, t2_batch = decide(env, queue)
+        m_name, m_batch = decide(env, queue, methods=list(measured.values()))
+        rows.append([qseed, len(queue), t2_name, t2_batch, m_name, m_batch,
+                     t2_name != m_name])
+
+    header = ["queue_seed", "n_queue", "table2_method", "table2_batch",
+              "measured_method", "measured_batch", "flipped"]
+    out = render(header, rows,
+                 "quant=auto decisions: Table II vs measured coefficients")
+    if not quiet:
+        print(out)
+    n_flips = sum(1 for r in rows if r[6])
+    ok = n_flips >= 1
+    save_table("calibration_flip", header, rows,
+               meta={"arch": ARCH, "reduced": REDUCED, "fast": fast,
+                     "queue": {"rate": QUEUE_RATE, "horizon": QUEUE_HORIZON,
+                               "seeds": QUEUE_SEEDS},
+                     "record": record,
+                     "snapped_betas": {n: m.beta for n, m in
+                                       measured.items()},
+                     "n_flips": n_flips})
+    print(f"[calibration_flip] measured coefficients changed "
+          f"{n_flips}/{len(rows)} quant=auto decisions: "
+          f"{'PASS' if ok else 'FAIL'}")
+    return rows, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="single batch size, fewer timing iters (CI smoke)")
+    args = ap.parse_args(argv)
+    _, ok = run(fast=args.fast)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,12 @@ pure loop-overhead datapoint); quantized rows additionally measure the
 interpret-mode Pallas dequant-matmul on CPU and the recurrent families
 their heavier step graphs — recorded for the trajectory, not gated.
 
+Each row also records ``speedup_vs_fp`` (fused tok/s at this precision
+over fused tok/s at fp in the same engine/batch): quantization must not
+COST throughput.  That is gated: W8 >= ~1x fp at batch >= 4 on the dense
+family, measured by a dedicated interleaved best-of pass (see
+``W8_PARITY_FLOOR``), deterministic enough for CI.
+
   PYTHONPATH=src python -m benchmarks.engine_decode [--fast]
 """
 from __future__ import annotations
@@ -51,6 +57,15 @@ BATCHES = [1, 4, 8]
 QUANTS = [0, 8, 4]      # weight bits (0 = full precision)
 S_MAX, N_MAX = 16, 64
 SPEEDUP_FLOOR = 3.0     # acceptance: fused >= 3x legacy at B=8 (dense fp)
+# acceptance: "quantization must pay" — serving W8 may not cost throughput
+# vs full precision at batch >= 4 on the dense family.  On interpret
+# backends the engine dequantizes at load (int8 matmuls LOSE to the f32
+# BLAS on CPU), so the ratio is parity-by-construction and the gate is
+# deterministic up to timer noise; the floor absorbs that noise (~±7%
+# per ~30ms sample on a busy host — the guarded regression is the old
+# 0.28x state, not percent-level drift).  On TPU the same gate demands
+# a real int8 win.
+W8_PARITY_FLOOR = 0.9
 
 
 def _tok_s(fn, prompts, caps, bits, iters: int):
@@ -62,6 +77,29 @@ def _tok_s(fn, prompts, caps, bits, iters: int):
     return tokens / (time.perf_counter() - t0), tokens // iters
 
 
+def _one_tok_s(fn, prompts, caps, bits, calls: int = 2):
+    tokens = 0
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        tokens += int(fn(prompts, caps, quant_bits=bits).lengths.sum())
+    return tokens / (time.perf_counter() - t0)
+
+
+def _w8_parity(eng, prompts, caps, iters: int) -> float:
+    """Best-of-N W8/fp throughput ratio, timed INTERLEAVED
+    (fp, w8, fp, w8, ...) so machine-load drift hits both sides equally
+    and one-sided stalls are discarded by the best-of.  N is fixed well
+    above the table-timing ``iters``: each call is ~10ms, and the floor
+    needs both bests to have converged to the true per-call max."""
+    eng.generate(prompts, caps, quant_bits=0)           # warm both
+    eng.generate(prompts, caps, quant_bits=8)
+    fp_best = q_best = 0.0
+    for _ in range(max(iters, 8)):
+        fp_best = max(fp_best, _one_tok_s(eng.generate, prompts, caps, 0))
+        q_best = max(q_best, _one_tok_s(eng.generate, prompts, caps, 8))
+    return q_best / fp_best
+
+
 def run(fast: bool = False, seed: int = 0, quiet: bool = False):
     families = ["dense"] if fast else list(FAMILIES)
     batches = [8] if fast else BATCHES
@@ -70,6 +108,7 @@ def run(fast: bool = False, seed: int = 0, quiet: bool = False):
     rng = np.random.default_rng(seed)
 
     rows = []
+    parity = {}             # dense-family batch -> W8/fp throughput ratio
     for fam in families:
         arch, red = FAMILIES[fam]
         cfg = get_arch(arch).scaled(**red)
@@ -84,30 +123,48 @@ def run(fast: bool = False, seed: int = 0, quiet: bool = False):
             prompts = [rng.integers(1, cfg.vocab, size=S_MAX // 2).tolist()
                        for _ in range(B)]
             caps = [N_MAX] * B
+            fp_fused = None
             for bits in quants:
                 fused, n_tok = _tok_s(eng.generate, prompts, caps, bits,
                                       iters)
                 legacy, _ = _tok_s(eng.generate_reference, prompts, caps,
                                    bits, iters)
+                if bits == 0:
+                    fp_fused = fused
                 rows.append([fam, arch, B, bits, n_tok,
                              round(fused, 1), round(legacy, 1),
-                             round(fused / legacy, 2)])
+                             round(fused / legacy, 2),
+                             round(fused / fp_fused, 2)])
+            if fam == "dense" and B >= 4 and 8 in quants:
+                parity[B] = round(_w8_parity(eng, prompts, caps, iters), 3)
 
     header = ["family", "arch", "batch", "weight_bits", "tokens_per_call",
-              "fused_tok_s", "legacy_tok_s", "speedup"]
+              "fused_tok_s", "legacy_tok_s", "speedup", "speedup_vs_fp"]
     out = render(header, rows,
                  "Engine decode: fused while_loop vs legacy host loop")
     if not quiet:
         print(out)
     at_cap = [r for r in rows if r[0] == "dense" and r[2] == 8 and r[3] == 0]
-    ok = bool(at_cap) and all(r[7] >= SPEEDUP_FLOOR for r in at_cap)
+    ok_loop = bool(at_cap) and all(r[7] >= SPEEDUP_FLOOR for r in at_cap)
+    ok_w8 = bool(parity) and all(v >= W8_PARITY_FLOOR
+                                 for v in parity.values())
     save_table("engine_decode", header, rows,
                meta={"s_max": S_MAX, "n_max": N_MAX, "iters": iters,
                      "fast": fast, "speedup_floor": SPEEDUP_FLOOR,
-                     "floor_met_at_batch8": ok})
+                     "floor_met_at_batch8": ok_loop,
+                     "w8_parity_floor": W8_PARITY_FLOOR,
+                     "w8_parity": {str(k): v for k, v in parity.items()},
+                     "w8_parity_ok": ok_w8})
     print(f"[engine_decode] fused >= {SPEEDUP_FLOOR}x legacy at batch 8 "
-          f"(dense, full precision): {'PASS' if ok else 'FAIL'}")
-    return rows, ok
+          f"(dense, full precision): {'PASS' if ok_loop else 'FAIL'}")
+    print(f"[engine_decode] W8 >= {W8_PARITY_FLOOR}x fp tok/s at "
+          f"batch >= 4 (dense): {parity} "
+          f"{'PASS' if ok_w8 else 'FAIL'}")
+    # hosted CI runners are too noisy to gate merges on the fused-vs-legacy
+    # timing ratio, so --fast records that datapoint without gating; the W8
+    # parity gate is deterministic (interleaved best-of ratio of the SAME
+    # computation on interpret backends) and gates everywhere.
+    return rows, (ok_loop or fast) and ok_w8
 
 
 def main(argv=None):
@@ -116,10 +173,7 @@ def main(argv=None):
                     help="dense family only, batch 8 (CI smoke)")
     args = ap.parse_args(argv)
     _, ok = run(fast=args.fast)
-    # hosted CI runners are too noisy to gate merges on a timing ratio:
-    # --fast records the datapoint (uploaded as an artifact) but only the
-    # full local run is authoritative for the floor
-    return 0 if (ok or args.fast) else 1
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,97 @@
+"""Quantized-matmul kernel microbenchmark: the three precision tiers.
+
+Times ``kernels.ops.quant_matmul`` (Pallas) per variant x shape against
+the f32 ``jnp.dot`` baseline:
+
+  * ``W8A16`` — int8 weights dequantized in-kernel, f32 accumulate;
+  * ``W8A8``  — int8 weights x dynamically row-quantized int8
+    activations, int8xint8 dot with int32 accumulation, one rescale at
+    writeout (the tier where quantization PAYS on int8-capable MXUs);
+  * ``W4A16`` — packed int4 weights, index-free even/odd unpack + f32
+    accumulate.
+
+Emits ``experiments/benchmarks/quant_kernels.json`` so per-kernel cost
+is tracked per PR next to the end-to-end engine_decode numbers.  On CPU
+the kernels run under the Pallas interpreter — absolute times are
+emulation costs and the ratios are recorded for the trajectory, not
+gated (the serving engine dequantizes at load on interpret backends for
+exactly this reason).  On TPU the same table measures the real MXU
+paths.
+
+  PYTHONPATH=src python -m benchmarks.quant_kernels [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import render, save_table
+from repro.kernels import ops
+from repro.quant.ptq import quantize
+
+# (M, K, N): decode-shaped (skinny M), prefill-shaped, and a ragged
+# remainder shape exercising the padding path
+SHAPES = [(8, 256, 256), (128, 512, 512), (64, 384, 200)]
+VARIANTS = [("W8A16", 8, 16), ("W8A8", 8, 8), ("W4A16", 4, 16)]
+
+
+def _best_us(fn, iters: int) -> float:
+    fn()                                    # warmup / compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(fast: bool = False, seed: int = 0, quiet: bool = False):
+    shapes = SHAPES[:1] if fast else SHAPES
+    iters = 3 if fast else 10
+    rng = jax.random.PRNGKey(seed)
+
+    rows = []
+    for (m, k, n) in shapes:
+        kx, kw = jax.random.split(jax.random.fold_in(rng, m * n))
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32) / jnp.sqrt(k)
+        fp_us = _best_us(
+            lambda: jnp.dot(x, w).block_until_ready(), iters)
+        rows.append([f"{m}x{k}x{n}", "f32", round(fp_us, 1), 1.0])
+        for name, bits, act_bits in VARIANTS:
+            qt = quantize(w, bits, act_bits=act_bits)
+            us = _best_us(
+                lambda: ops.qmatmul(x, qt).block_until_ready(), iters)
+            rows.append([f"{m}x{k}x{n}", name, round(us, 1),
+                         round(us / fp_us, 2)])
+
+    header = ["shape", "variant", "best_us", "vs_f32"]
+    out = render(header, rows, "quant_matmul kernel tiers vs f32 dot")
+    if not quiet:
+        print(out)
+    ok = all(r[2] > 0 for r in rows)        # sanity: every variant ran
+    save_table("quant_kernels", header, rows,
+               meta={"backend": jax.default_backend(),
+                     "interpret": ops.INTERPRET, "iters": iters,
+                     "fast": fast})
+    print(f"[quant_kernels] {len(rows)} datapoints on "
+          f"{jax.default_backend()} (interpret={ops.INTERPRET}): "
+          f"{'PASS' if ok else 'FAIL'}")
+    return rows, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="single shape, fewer iters (CI smoke)")
+    args = ap.parse_args(argv)
+    _, ok = run(fast=args.fast)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

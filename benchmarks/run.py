@@ -26,6 +26,8 @@ def main(argv=None):
                             multi_llm_continuous as mlc,
                             paged_vs_slab as pvs,
                             engine_decode as ed,
+                            quant_kernels as qk,
+                            calibration_flip as cf,
                             continuous_vs_epoch as cve,
                             roofline_report as rr)
 
@@ -39,6 +41,8 @@ def main(argv=None):
             ("table3", t3, {"n_epochs": max(4, n // 3)}),
             ("multi_llm", ml, {"n_epochs": max(6, n // 2)}),
             ("engine_decode", ed, {"fast": args.fast}),
+            ("quant_kernels", qk, {"fast": args.fast}),
+            ("calibration_flip", cf, {"fast": args.fast}),
             ("continuous", cve, {"fast": args.fast}),
             ("multi_continuous", mlc, {"fast": args.fast}),
             ("paged_vs_slab", pvs, {"fast": args.fast}),

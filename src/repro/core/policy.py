@@ -238,24 +238,53 @@ class DftspPolicy(SchedulerPolicy):
     pins an explicit method, and ``"auto"`` selects the
     throughput-optimal admissible method per epoch
     (``dftsp_schedule_auto``).
+
+    ``calib`` picks the coefficient source the ``auto`` descent runs on:
+    ``"table2"`` (default) uses the paper's Table-II METHODS, and
+    ``"measured"`` uses engine-measured records installed via
+    :meth:`install_measured` (quant/calibration.measured_methods) — the
+    scheduler then optimizes for the engine it actually drives.
     """
 
     def __init__(self, prune: bool = True, order_desc: bool = True,
                  d_sweep: bool = True, fast_z_bound: bool = True,
-                 quant: str = "env"):
+                 quant: str = "env", calib: str = "table2"):
+        if calib not in ("table2", "measured"):
+            raise ValueError(f"unknown calib source {calib!r} "
+                             "(expected table2|measured)")
         self.prune = prune
         self.order_desc = order_desc
         self.d_sweep = d_sweep
         self.fast_z_bound = fast_z_bound
         self.quant = quant
+        self.calib = calib
+        self._measured: Optional[Dict[str, QuantMethod]] = None
         if quant != "auto":
             _resolve_quant_param(quant)     # fail fast on bad names
+
+    def install_measured(self, methods: Dict[str, QuantMethod]) -> None:
+        """Install engine-measured QuantMethod records (used by the auto
+        descent when ``calib="measured"``)."""
+        self._measured = dict(methods)
+
+    def _method_pool(self):
+        """The candidate METHODS the auto descent draws from, or None for
+        the Table-II default."""
+        if self.calib != "measured":
+            return None
+        if self._measured is None:
+            raise RuntimeError(
+                "calib='measured' needs install_measured() — run "
+                "quant/calibration.measure_beta on the serving engine "
+                "and install measured_methods() first")
+        return list(self._measured.values())
 
     def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
         kw = dict(prune=self.prune, order_desc=self.order_desc,
                   d_sweep=self.d_sweep, fast_z_bound=self.fast_z_bound)
         if self.quant == "auto":
-            sel, method, stats = dftsp_schedule_auto(env, queue, **kw)
+            sel, method, stats = dftsp_schedule_auto(
+                env, queue, methods=self._method_pool(), **kw)
             return Decision.single(sel, stats, quant=method)
         q = _resolve_quant_param(self.quant)
         sel, stats = dftsp_schedule(env, queue, quant=q, **kw)
@@ -267,7 +296,8 @@ class DftspPolicy(SchedulerPolicy):
             return None
         if self.quant != "auto":
             return _resolve_quant_param(self.quant)
-        _, method, _ = dftsp_schedule_auto(env, list(batch))
+        _, method, _ = dftsp_schedule_auto(env, list(batch),
+                                           methods=self._method_pool())
         return method
 
 
@@ -377,6 +407,11 @@ class MultiDftspPolicy(SchedulerPolicy):
                                      order=self.order,
                                      quants=decision.quants)
 
+    def install_measured(self, methods: Dict[str, QuantMethod]) -> None:
+        """Engine-measured QuantMethod records for the per-cohort auto
+        descent (same contract as DftspPolicy.install_measured)."""
+        self._measured = dict(methods)
+
     def select_quant(self, menv: "_multi.MultiLLMEnv",
                      model_id: Optional[str],
                      batch: Sequence[Request]) -> Optional[QuantMethod]:
@@ -387,7 +422,10 @@ class MultiDftspPolicy(SchedulerPolicy):
             return None
         if self.quant != "auto":
             return get_method(self.quant)
-        _, method, _ = dftsp_schedule_auto(menv.envs[model_id], list(batch))
+        measured = getattr(self, "_measured", None)
+        _, method, _ = dftsp_schedule_auto(
+            menv.envs[model_id], list(batch),
+            methods=None if measured is None else list(measured.values()))
         return method
 
 

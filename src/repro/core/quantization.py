@@ -28,14 +28,36 @@ class QuantMethod:
     beta: float                      # compute-time scale vs FP16
     dppl: Dict[str, float] = field(default_factory=dict)
     dppl_default: float = 0.1
+    # measured-coefficient overrides (quant/calibration.py): when set, the
+    # analytic bits/16 ratios are replaced by values measured on the real
+    # quantized trees / engine, so every P2Coefficients and quant=auto
+    # descent runs on the engine that will actually serve the decision.
+    # ``beta`` itself is a plain field — measured betas arrive via
+    # ``dataclasses.replace`` (see calibration.measured_methods).
+    alpha_w_measured: Optional[float] = None
+    alpha_a_measured: Optional[float] = None
 
     @property
     def alpha_w(self) -> float:
+        if self.alpha_w_measured is not None:
+            return self.alpha_w_measured
         return self.weight_bits / 16.0
 
     @property
     def alpha_a(self) -> float:
+        if self.alpha_a_measured is not None:
+            return self.alpha_a_measured
         return self.act_bits / 16.0
+
+    @property
+    def serve_bits(self):
+        """The engine-facing precision spec: plain weight bits for
+        weight-only methods, a ``(weight_bits, act_bits)`` pair when the
+        method also quantizes activations (W8A8 -> the int8-accumulation
+        kernel tier; see ServingEngine._canon_bits)."""
+        if self.act_bits < 16 and self.weight_bits < 16:
+            return (self.weight_bits, self.act_bits)
+        return self.weight_bits
 
     @property
     def alpha(self) -> float:

@@ -124,6 +124,282 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, nh, dh)
 
 
+# ---------------------------------------------------------------------------
+# Fused QUANTIZED flash-decode (DESIGN.md §3): the QKV/output projections
+# consume int8 weight tiles directly inside the decode grid, so one kernel
+# covers hidden-state -> attention output and the HBM side never sees an
+# fp weight copy.  Layout per grid step (b, h, ss):
+#
+#   ss == 0      : project q/k1/v1 for (b, h) from x (1, D) and the int8
+#                  tiles wq (D, G*dh) / wk, wv (D, dh); apply rope from
+#                  precomputed cos/sin rows; stash in VMEM scratch and
+#                  emit k1/v1 as outputs (the caller writes the cache —
+#                  the kernel attends over the PRE-write cache and folds
+#                  the current token in as a final online-softmax step,
+#                  which is equivalent because slot pos is masked out of
+#                  the pre-write reads).
+#   every ss     : one online-softmax block over the cache, exactly
+#                  ``_decode_kernel``.
+#   ss == n_s-1  : fold in the current token, normalize, and project the
+#                  (G, dh) head group through its wo tile (G*dh, D),
+#                  accumulating into o (1, D) across the h grid steps
+#                  (axis 1 is "arbitrary" so the output block stays
+#                  resident in VMEM).
+#
+# ``a8=True`` additionally quantizes the projection activations per row
+# (absmax/127, in-kernel) and runs int8 x int8 -> int32 dots — the W8A8
+# tier inside the decode grid.  Attention itself stays f32 (the cache is
+# fp here; int8-KV decode keeps its own dequant path in models/common).
+# ---------------------------------------------------------------------------
+
+
+def _qproject(xr, w, s, a8: bool):
+    """(1, Din) f32 @ dequant(w (Din, Dout) int8, s (1, Dout)) -> (1, Dout).
+
+    a8: dynamic rowwise activation quantization feeding an int8 x int8
+    dot with int32 accumulation and a single rescale at writeout (the
+    in-grid copy of the quant_matmul W8A8 tier)."""
+    if a8:
+        amax = jnp.max(jnp.abs(xr), axis=-1, keepdims=True)
+        sx = jnp.where(amax > 0, amax * jnp.float32(1.0 / 127.0), 1.0)
+        xq = jnp.clip(jnp.round(xr / sx), -128, 127).astype(jnp.int8)
+        acc = jax.lax.dot_general(xq, w, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * sx * s.astype(jnp.float32)
+    wf = w.astype(jnp.float32) * s.astype(jnp.float32)
+    return jnp.dot(xr, wf, preferred_element_type=jnp.float32)
+
+
+def _rot_half(t, cos, sin):
+    """Rope rotation on (R, dh) rows; cos/sin (1, dh/2) — the same
+    split-halves convention as models/common.apply_rope."""
+    h = t.shape[-1] // 2
+    t1, t2 = t[:, :h], t[:, h:]
+    return jnp.concatenate([t1 * cos - t2 * sin, t1 * sin + t2 * cos],
+                           axis=-1)
+
+
+def _fused_body(nv_ref, ev_ref, x_ref, cos_ref, sin_ref, wq_ref, sq_ref,
+                wk_ref, sk_ref, wv_ref, sv_ref, wo_ref, so_ref, k_ref,
+                v_ref, o_ref, k1_ref, v1_ref, q_s, k1_s, v1_s, m_ref,
+                l_ref, acc_ref, *, n_s: int, block_s: int, use_rope: bool,
+                a8: bool):
+    """Shared body of the contiguous and paged fused kernels (the paged
+    variant only changes how k_ref/v_ref blocks are addressed)."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ss = pl.program_id(2)
+    G, dh = q_s.shape
+    inv_sqrt = 1.0 / (dh ** 0.5)
+
+    @pl.when(ss == 0)
+    def _():
+        xr = x_ref[...].astype(jnp.float32)                      # (1, D)
+        qh = _qproject(xr, wq_ref[...], sq_ref[...], a8).reshape(G, dh)
+        k1 = _qproject(xr, wk_ref[...], sk_ref[...], a8)         # (1, dh)
+        v1 = _qproject(xr, wv_ref[...], sv_ref[...], a8)
+        if use_rope:
+            cos, sin = cos_ref[...], sin_ref[...]
+            qh = _rot_half(qh, cos, sin)
+            k1 = _rot_half(k1, cos, sin)
+        q_s[...] = qh
+        k1_s[...] = k1
+        v1_s[...] = v1
+        k1_ref[0] = k1.astype(k1_ref.dtype)
+        v1_ref[0] = v1.astype(v1_ref.dtype)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_s[...] * inv_sqrt
+    k = k_ref[0, :, 0].astype(jnp.float32)                       # (bs, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, bs)
+    slot = ss * block_s + jax.lax.broadcasted_iota(jnp.int32, (G, block_s), 1)
+    # pre-write cache: nv slots are valid, minus the one the current
+    # token is about to overwrite (rolling windows at pos >= W)
+    s = jnp.where((slot < nv_ref[b]) & (slot != ev_ref[b]), s, NEG)
+
+    m_prev = m_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ss == n_s - 1)
+    def _():
+        # the current token as one more online-softmax step
+        qf = q_s[...] * inv_sqrt
+        s_cur = jnp.dot(qf, k1_s[...].T,
+                        preferred_element_type=jnp.float32)      # (G, 1)
+        m_prev = m_ref[:, :1]
+        m_fin = jnp.maximum(m_prev, s_cur)
+        p = jnp.exp(s_cur - m_fin)
+        alpha = jnp.exp(m_prev - m_fin)
+        l_fin = alpha * l_ref[:, :1] + p
+        acc_fin = acc_ref[...] * alpha + jnp.dot(
+            p, v1_s[...], preferred_element_type=jnp.float32)
+        attn = acc_fin / jnp.maximum(l_fin, 1e-30)               # (G, dh)
+        o_c = _qproject(attn.reshape(1, G * dh), wo_ref[...], so_ref[...],
+                        a8)
+
+        @pl.when(h == 0)
+        def _():
+            o_ref[...] = o_c.astype(o_ref.dtype)
+
+        @pl.when(h > 0)
+        def _():
+            o_ref[...] += o_c.astype(o_ref.dtype)
+
+
+def _fused_paged_body(nv_ref, ev_ref, tbl_ref, *rest, **kw):
+    """Paged flavor: the block table is consumed only by the BlockSpec
+    index maps; the body itself is the contiguous kernel."""
+    del tbl_ref
+    _fused_body(nv_ref, ev_ref, *rest, **kw)
+
+
+def flash_decode_fused(x, wq, sq, wk, sk, wv, sv, wo, so, k_cache, v_cache,
+                       n_valid, evict, cos, sin, *, block_s: int = DEFAULT_BS,
+                       use_rope: bool = True, a8: bool = False,
+                       interpret: bool = False):
+    """Fused quantized decode-attention over a contiguous slot cache.
+
+    x (B, D) hidden rows; wq (D, nh*dh)/wk, wv (D, nkv*dh) int8 with
+    (1, cols) f32 scales; wo (nh*dh, D) int8 + (1, D) scale; k/v_cache
+    (B, W, nkv, dh) PRE-write; n_valid (B,) valid slots (= pos), evict
+    (B,) slot the current token will overwrite (-1 = none); cos/sin
+    (1, dh/2) rope rows for the current position.  Returns
+    (o (B, D), k1 (B, nkv, dh), v1 (B, nkv, dh)) — the caller writes
+    k1/v1 at slot pos.
+    """
+    B, D = x.shape
+    W, nkv, dh = k_cache.shape[1], k_cache.shape[2], k_cache.shape[3]
+    nh = wq.shape[1] // dh
+    G = nh // nkv
+    block_s = min(block_s, W)
+    assert W % block_s == 0, (W, block_s)
+    n_s = W // block_s
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, h, s, *pf: (b, 0)),        # x
+            pl.BlockSpec((1, dh // 2), lambda b, h, s, *pf: (0, 0)),  # cos
+            pl.BlockSpec((1, dh // 2), lambda b, h, s, *pf: (0, 0)),  # sin
+            pl.BlockSpec((D, G * dh), lambda b, h, s, *pf: (0, h)),   # wq
+            pl.BlockSpec((1, G * dh), lambda b, h, s, *pf: (0, h)),
+            pl.BlockSpec((D, dh), lambda b, h, s, *pf: (0, h)),       # wk
+            pl.BlockSpec((1, dh), lambda b, h, s, *pf: (0, h)),
+            pl.BlockSpec((D, dh), lambda b, h, s, *pf: (0, h)),       # wv
+            pl.BlockSpec((1, dh), lambda b, h, s, *pf: (0, h)),
+            pl.BlockSpec((G * dh, D), lambda b, h, s, *pf: (h, 0)),   # wo
+            pl.BlockSpec((1, D), lambda b, h, s, *pf: (0, 0)),
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda b, h, s, *pf: (b, s, h, 0)),          # k
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda b, h, s, *pf: (b, s, h, 0)),          # v
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda b, h, s, *pf: (b, 0)),        # o
+            pl.BlockSpec((1, 1, dh), lambda b, h, s, *pf: (b, h, 0)),  # k1
+            pl.BlockSpec((1, 1, dh), lambda b, h, s, *pf: (b, h, 0)),  # v1
+        ],
+        scratch_shapes=[pltpu.VMEM((G, dh), jnp.float32),   # q
+                        pltpu.VMEM((1, dh), jnp.float32),   # k1
+                        pltpu.VMEM((1, dh), jnp.float32),   # v1
+                        pltpu.VMEM((G, 128), jnp.float32),  # m
+                        pltpu.VMEM((G, 128), jnp.float32),  # l
+                        pltpu.VMEM((G, dh), jnp.float32)],  # acc
+    )
+    out_shapes = [jax.ShapeDtypeStruct((B, D), x.dtype),
+                  jax.ShapeDtypeStruct((B, nkv, dh), x.dtype),
+                  jax.ShapeDtypeStruct((B, nkv, dh), x.dtype)]
+    o, k1, v1 = pl.pallas_call(
+        functools.partial(_fused_body, n_s=n_s, block_s=block_s,
+                          use_rope=use_rope, a8=a8),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32), jnp.asarray(evict, jnp.int32),
+      x, cos, sin, wq, sq, wk, sk, wv, sv, wo, so, k_cache, v_cache)
+    return o, k1, v1
+
+
+def flash_decode_fused_paged(x, wq, sq, wk, sk, wv, sv, wo, so, k_pages,
+                             v_pages, table, n_valid, evict, cos, sin, *,
+                             use_rope: bool = True, a8: bool = False,
+                             interpret: bool = False):
+    """Paged-table flavor of :func:`flash_decode_fused`: K/V live in the
+    node-wide page arena (P, block_tokens, nkv, dh) and grid axis 2
+    walks LOGICAL blocks through the scalar-prefetched table, exactly as
+    ``flash_decode_paged``.  Returns (o, k1, v1); the caller writes
+    k1/v1 into page ``table[b, pos // bt]`` offset ``pos % bt``.
+    """
+    B, D = x.shape
+    bt, nkv, dh = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    n_b = table.shape[1]
+    nh = wq.shape[1] // dh
+    G = nh // nkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, nkv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, h, j, *pf: (b, 0)),        # x
+            pl.BlockSpec((1, dh // 2), lambda b, h, j, *pf: (0, 0)),  # cos
+            pl.BlockSpec((1, dh // 2), lambda b, h, j, *pf: (0, 0)),  # sin
+            pl.BlockSpec((D, G * dh), lambda b, h, j, *pf: (0, h)),   # wq
+            pl.BlockSpec((1, G * dh), lambda b, h, j, *pf: (0, h)),
+            pl.BlockSpec((D, dh), lambda b, h, j, *pf: (0, h)),       # wk
+            pl.BlockSpec((1, dh), lambda b, h, j, *pf: (0, h)),
+            pl.BlockSpec((D, dh), lambda b, h, j, *pf: (0, h)),       # wv
+            pl.BlockSpec((1, dh), lambda b, h, j, *pf: (0, h)),
+            pl.BlockSpec((G * dh, D), lambda b, h, j, *pf: (h, 0)),   # wo
+            pl.BlockSpec((1, D), lambda b, h, j, *pf: (0, 0)),
+            # page indirection: logical block j -> physical page tbl[b, j]
+            pl.BlockSpec((1, bt, 1, dh),
+                         lambda b, h, j, nv, ev, tbl: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bt, 1, dh),
+                         lambda b, h, j, nv, ev, tbl: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda b, h, j, *pf: (b, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, h, j, *pf: (b, h, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, h, j, *pf: (b, h, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((G, dh), jnp.float32),
+                        pltpu.VMEM((1, dh), jnp.float32),
+                        pltpu.VMEM((1, dh), jnp.float32),
+                        pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, 128), jnp.float32),
+                        pltpu.VMEM((G, dh), jnp.float32)],
+    )
+    out_shapes = [jax.ShapeDtypeStruct((B, D), x.dtype),
+                  jax.ShapeDtypeStruct((B, nkv, dh), x.dtype),
+                  jax.ShapeDtypeStruct((B, nkv, dh), x.dtype)]
+    o, k1, v1 = pl.pallas_call(
+        functools.partial(_fused_paged_body, n_s=n_b, block_s=bt,
+                          use_rope=use_rope, a8=a8),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32), jnp.asarray(evict, jnp.int32),
+      jnp.asarray(table, jnp.int32), x, cos, sin, wq, sq, wk, sk, wv, sv,
+      wo, so, k_pages, v_pages)
+    return o, k1, v1
+
+
 def _paged_decode_kernel(nv_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
                          m_ref, l_ref, acc_ref, *, n_b: int, block_t: int):
     """One (batch, kv-head) pair; grid axis 2 walks the LOGICAL blocks of

@@ -29,21 +29,37 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block_m", "block_n",
-                                             "block_k"))
+@functools.partial(jax.jit, static_argnames=("bits", "act_bits", "block_m",
+                                             "block_n", "block_k"))
 def quant_matmul(x: jax.Array, q: jax.Array, scale: jax.Array,
-                 bits: int = 8, block_m: int = 128, block_n: int = 128,
-                 block_k: int = 256) -> jax.Array:
-    """x (..., K) @ dequant(q, scale) -> (..., N).  Pads to block multiples."""
+                 bits: int = 8, act_bits: int = 16, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 256) -> jax.Array:
+    """x (..., K) @ dequant(q, scale) -> (..., N).  Pads to block multiples.
+
+    ``act_bits=8`` (with ``bits=8``) runs the W8A8 tier: x is dynamically
+    quantized per row (absmax/127 over the full K axis) HERE, outside the
+    grid, so the kernel sees int8 operands and one (M, 1) scale — the
+    int8 x int8 dot accumulates in int32 and rescales once at writeout.
+    """
     *lead, K = x.shape
     N = scale.shape[0]
     M = 1
     for d in lead:
         M *= d
     x2 = x.reshape(M, K)
+    a8 = act_bits == 8 and bits == 8
 
-    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
-    x2 = _pad_to(x2, 0, bm)
+    # int8 operands need a (32, 128) min tile on real TPUs (interpret
+    # mode doesn't care); f32 needs (8, 128)
+    bm = min(block_m, max(32 if a8 else 8, 1 << (M - 1).bit_length()))
+    if a8:
+        from repro.quant.ptq import quantize_rowwise
+        xq, sx = quantize_rowwise(x2)
+        x2 = _pad_to(xq, 0, bm)
+        sxp = _pad_to(sx, 0, bm)
+    else:
+        x2 = _pad_to(x2, 0, bm)
+        sxp = None
     x2 = _pad_to(x2, 1, block_k)
     Kp = x2.shape[1]
     if bits == 4:
@@ -54,16 +70,102 @@ def quant_matmul(x: jax.Array, q: jax.Array, scale: jax.Array,
     qp = _pad_to(qp, 1, block_n)
     sp = _pad_to(scale.reshape(-1), 0, block_n)
 
-    out = _qm.quant_matmul(x2, qp, sp, bits, block_m=bm, block_n=block_n,
+    out = _qm.quant_matmul(x2, qp, sp, bits, x_scale=sxp,
+                           out_dtype=x.dtype, block_m=bm, block_n=block_n,
                            block_k=block_k, interpret=INTERPRET)
     return out[:M, :N].reshape(*lead, N)
 
 
 def qmatmul(x: jax.Array, w) -> jax.Array:
-    """Dispatch on weight type: QTensor -> Pallas kernel; array -> XLA."""
+    """Dispatch on weight type: QTensor -> Pallas kernel; array -> XLA.
+    QTensor leaves tagged ``act_bits=8`` route to the W8A8 tier."""
     if isinstance(w, QTensor):
-        return quant_matmul(x, w.q, w.scale, w.bits)
+        return quant_matmul(x, w.q, w.scale, w.bits, act_bits=w.act_bits)
     return x @ w
+
+
+def _rope_rows(pos, dh: int, theta: float):
+    """cos/sin (1, dh/2) rows for the current decode position (the same
+    angle convention as models/common.apply_rope)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = jnp.asarray(pos, jnp.float32) * freqs
+    return jnp.cos(ang).reshape(1, -1), jnp.sin(ang).reshape(1, -1)
+
+
+def fusable_decode(p, cfg) -> bool:
+    """True when a layer's attention params can take the fused quantized
+    decode kernel: all four projections are int8 QTensors (W8A16 or W8A8
+    — int4 stays on the unfused tier), no qk-norm (applied between
+    projection and rope, which the fused grid doesn't model), and the
+    head dim is lane-aligned unless we're interpreting."""
+    ws = [p.get("wq"), p.get("wk"), p.get("wv"), p.get("wo")]
+    return (all(isinstance(w, QTensor) and w.bits == 8 for w in ws)
+            and not cfg.qk_norm
+            and (cfg.d_head % 128 == 0 or INTERPRET))
+
+
+@functools.partial(jax.jit, static_argnames=("rope_theta", "use_rope",
+                                             "block_s"))
+def flash_decode_fused(x: jax.Array, wq, wk, wv, wo, cache_k: jax.Array,
+                       cache_v: jax.Array, pos, rope_theta: float = 1e4,
+                       use_rope: bool = True, block_s: int = 512):
+    """Fused quantized decode attention (contiguous cache).
+
+    x (B, D) pre-norm hidden rows; wq/wk/wv/wo int8 QTensors; caches
+    (B, W, nkv, dh) PRE-write.  The QKV/output projections run on int8
+    weight tiles inside the decode grid (W8A8 when the tensors carry
+    ``act_bits=8``); the kernel attends over the pre-write cache plus the
+    freshly-projected current token, so its output equals project ->
+    rope -> cache_write -> flash_decode -> wo on the post-write cache.
+    Returns (o (B, D), k1 (B, nkv, dh), v1 (B, nkv, dh)); the CALLER
+    writes k1/v1 at slot pos % W.
+    """
+    B, W, nkv, dh = cache_k.shape[0], cache_k.shape[1], cache_k.shape[2], \
+        cache_k.shape[3]
+    assert wq.bits == 8 and wo.bits == 8, (wq.bits, wo.bits)
+    assert dh % 128 == 0 or INTERPRET, dh
+    a8 = wq.act_bits == 8
+    bs = min(block_s, max(128, 1 << (W - 1).bit_length()))
+    ck = _pad_to(cache_k, 1, bs)
+    cv = _pad_to(cache_v, 1, bs)
+    posi = jnp.asarray(pos, jnp.int32)
+    nv = jnp.broadcast_to(jnp.minimum(posi, W), (B,))
+    # slot the current token is about to overwrite: invalid in the
+    # pre-write read once the window has wrapped (pos >= W)
+    ev = jnp.broadcast_to(jnp.where(posi >= W, posi % W, -1), (B,))
+    cos, sin = _rope_rows(posi, dh, rope_theta)
+    return _fd.flash_decode_fused(
+        x, wq.q, wq.scale.reshape(1, -1), wk.q, wk.scale.reshape(1, -1),
+        wv.q, wv.scale.reshape(1, -1), wo.q, wo.scale.reshape(1, -1),
+        ck, cv, nv, ev, cos, sin, block_s=bs, use_rope=use_rope, a8=a8,
+        interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("rope_theta", "use_rope"))
+def flash_decode_fused_paged(x: jax.Array, wq, wk, wv, wo,
+                             k_pages: jax.Array, v_pages: jax.Array,
+                             table: jax.Array, pos,
+                             rope_theta: float = 1e4,
+                             use_rope: bool = True):
+    """Paged-table flavor of :func:`flash_decode_fused`: k/v_pages
+    (P, block_tokens, nkv, dh) arena slices (tail-sliced to the model's
+    geometry by the caller), table (B, n_b) int32.  Returns (o, k1, v1);
+    the caller writes k1/v1 into page ``table[b, pos // bt]``."""
+    B = x.shape[0]
+    bt, dh = k_pages.shape[1], k_pages.shape[3]
+    W = table.shape[1] * bt
+    assert wq.bits == 8 and wo.bits == 8, (wq.bits, wo.bits)
+    assert dh % 128 == 0 or INTERPRET, dh
+    a8 = wq.act_bits == 8
+    posi = jnp.asarray(pos, jnp.int32)
+    nv = jnp.broadcast_to(jnp.minimum(posi, W), (B,))
+    ev = jnp.broadcast_to(jnp.where(posi >= W, posi % W, -1), (B,))
+    cos, sin = _rope_rows(posi, dh, rope_theta)
+    return _fd.flash_decode_fused_paged(
+        x, wq.q, wq.scale.reshape(1, -1), wk.q, wk.scale.reshape(1, -1),
+        wv.q, wv.scale.reshape(1, -1), wo.q, wo.scale.reshape(1, -1),
+        k_pages, v_pages, jnp.asarray(table, jnp.int32), nv, ev, cos, sin,
+        use_rope=use_rope, a8=a8, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s",))

@@ -20,6 +20,24 @@ def quant_matmul_ref(x: jax.Array, q: jax.Array, scale: jax.Array,
     return out.astype(x.dtype)
 
 
+def quant_matmul_a8_ref(x: jax.Array, q: jax.Array,
+                        scale: jax.Array) -> jax.Array:
+    """W8A8 oracle: dynamic rowwise activation quantization, exact int32
+    dot, one per-(row, channel) rescale at writeout.
+
+    The int32 contraction is EXACT integer math (no rounding), so the
+    Pallas kernel's blocked int32 accumulation must match it bit for bit
+    before the final f32 rescale — tests exploit that.
+    """
+    from repro.quant.ptq import quantize_rowwise
+    xq, sx = quantize_rowwise(x)
+    acc = jax.lax.dot_general(xq.astype(jnp.int32), q.astype(jnp.int32),
+                              (((1,), (0,)), ((), ())))
+    out = acc.astype(jnp.float32) * sx \
+        * scale.reshape(1, -1).astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      n_valid: jax.Array) -> jax.Array:
     """GQA decode attention oracle.

@@ -25,7 +25,8 @@ def mm(x: jax.Array, w) -> jax.Array:
     from repro.quant.ptq import QTensor
     if isinstance(w, QTensor):
         from repro.kernels import ops as kops
-        return kops.quant_matmul(x, w.q, w.scale.reshape(-1), w.bits)
+        return kops.quant_matmul(x, w.q, w.scale.reshape(-1), w.bits,
+                                 act_bits=w.act_bits)
     return x @ w
 
 
@@ -318,6 +319,18 @@ def decode_attention(p: Params, cfg: ModelConfig, x: jax.Array,
     """One-token decode step.  x: (B, 1, D); pos: scalar current position.
     Returns (out (B,1,D), new_cache_k, new_cache_v)."""
     B = x.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        if kops.fusable_decode(p, cfg):
+            # fused tier: QKV/output projections consume the int8 weight
+            # tiles inside the decode grid; the kernel attends over the
+            # pre-write cache + current token, caller writes k1/v1 after
+            o, k1, v1 = kops.flash_decode_fused(
+                x[:, 0], p["wq"], p["wk"], p["wv"], p["wo"], cache_k,
+                cache_v, pos, rope_theta=cfg.rope_theta, use_rope=use_rope)
+            ck, cv = cache_write(cache_k, cache_v, k1[:, None], v1[:, None],
+                                 pos)
+            return constrain(o[:, None], "batch", None, None), ck, cv
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
     q, k1, v1 = qkv_proj(p, cfg, x, positions, use_rope)
     ck, cv = cache_write(cache_k, cache_v, k1, v1, pos)
@@ -335,16 +348,19 @@ def decode_attention(p: Params, cfg: ModelConfig, x: jax.Array,
 
 
 def decode_attention_cache(p: Params, cfg: ModelConfig, x: jax.Array,
-                           cache: Dict[str, jax.Array], pos: jax.Array
+                           cache: Dict[str, jax.Array], pos: jax.Array,
+                           use_kernel: bool = False
                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Dict-cache decode step supporting int8 KV (cfg.kv_bits == 8).
 
     cache: {"k","v"} (+ {"ks","vs"} scales when quantized).  Returns
-    (out (B,1,D), new cache dict).
+    (out (B,1,D), new cache dict).  ``use_kernel`` routes the fp-cache
+    path through the Pallas decode kernels (fused quantized flavor when
+    the projections are int8 QTensors).
     """
     if cfg.kv_bits != 8:
         out, ck, cv = decode_attention(p, cfg, x, cache["k"], cache["v"],
-                                       pos)
+                                       pos, use_kernel=use_kernel)
         return out, {"k": ck, "v": cv}
     B = x.shape[0]
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
@@ -393,9 +409,7 @@ def decode_attention_paged(p: Params, cfg: ModelConfig, x: jax.Array,
     through ``flash_decode_paged`` (no gather; TPU path, fp cache only).
     """
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
-    q, k1, v1 = qkv_proj(p, cfg, x, positions)
-    nkv, dh = k1.shape[2], k1.shape[3]
+    nkv, dh = cfg.n_kv_heads, cfg.d_head
     bt = pages["k"].shape[1]
     n_b = table.shape[1]
     W = n_b * bt
@@ -404,6 +418,21 @@ def decode_attention_paged(p: Params, cfg: ModelConfig, x: jax.Array,
     page = jnp.take_along_axis(table, jnp.broadcast_to(blk, (B,))[:, None],
                                axis=1)[:, 0]                     # (B,)
     off = (pos % bt).astype(jnp.int32)
+    if use_kernel and cfg.kv_bits != 8:
+        from repro.kernels import ops as kops
+        if kops.fusable_decode(p, cfg):
+            o, k1f, v1f = kops.flash_decode_fused_paged(
+                x[:, 0], p["wq"], p["wk"], p["wv"], p["wo"],
+                pages["k"][..., :nkv, :dh], pages["v"][..., :nkv, :dh],
+                table, pos, rope_theta=cfg.rope_theta)
+            pk = pages["k"].at[page, off, :nkv, :dh].set(
+                k1f.astype(pages["k"].dtype))
+            pv = pages["v"].at[page, off, :nkv, :dh].set(
+                v1f.astype(pages["v"].dtype))
+            return constrain(o[:, None], "batch", None, None), \
+                {"k": pk, "v": pv}
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k1, v1 = qkv_proj(p, cfg, x, positions)
 
     def gather(pleaf):
         """Row-major view of a row's logical blocks, tail-sliced to this

@@ -194,9 +194,11 @@ def prefill(cfg: ModelConfig, params: Params, batch, cache_len: int = 0):
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache, tokens: jax.Array,
-                pos: jax.Array):
+                pos: jax.Array, use_kernel: bool = False):
     """One decode iteration.  tokens: (B, 1) int32; pos: scalar int32 giving
-    the position of this token (cache holds positions < pos)."""
+    the position of this token (cache holds positions < pos).
+    ``use_kernel`` routes attention through the Pallas decode kernels
+    (fused quantized flavor when the weights are int8 QTensors)."""
     x = common.maybe_dequant(params["embed"])[tokens]
     x = constrain(x, "batch", None, None)
 
@@ -204,7 +206,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache, tokens: jax.Array,
         lp, layer_cache = inputs
         h = common.apply_norm(cfg.norm, lp["norm1"], x)
         att, layer_cache = common.decode_attention_cache(
-            lp["attn"], cfg, h, layer_cache, pos)
+            lp["attn"], cfg, h, layer_cache, pos, use_kernel)
         x = x + att
         h = common.apply_norm(cfg.norm, lp["norm2"], x)
         if cfg.is_moe:

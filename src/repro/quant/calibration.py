@@ -1,24 +1,33 @@
-"""Measured quantization effects: alpha (memory) and dPPL (accuracy).
+"""Measured quantization effects: alpha (memory), beta (speed), dPPL.
 
 The paper takes alpha/beta/dPPL from offline exhaustive evaluation ([10],
-Table II).  Here both are *measured* on the actual JAX models:
+Table II).  Here all three are *measured* on the actual JAX models:
 
   * ``measure_alpha``  — bytes(quantized tree) / bytes(fp tree);
+  * ``measure_beta``   — decode-throughput ratio tok/s(fp) / tok/s(method)
+    timed on the REAL ServingEngine per (method, batch);
   * ``measure_dppl``   — perplexity difference between the fp and the
     weight-quantized model on a fixed synthetic eval set (real models would
     use WikiText; the machinery is identical).
 
-``calibrate`` packages both into a ``QuantMethod``-compatible record so the
-scheduler can run on measured numbers instead of the paper's table — the
-table remains the default so the reproduction is exact.
+``calibrate`` packages alpha/dPPL into a ``QuantMethod``-compatible record;
+``calibrate_engine`` + ``measured_methods`` close the loop for the
+SCHEDULER: the measured alpha/beta land in real ``QuantMethod`` records
+(via the ``alpha_*_measured`` overrides and a ``beta`` replace), so every
+``P2Coefficients`` and ``quant=auto`` descent runs on coefficients of the
+engine that will actually serve the decision instead of the paper's table.
+The table remains the default so the reproduction is exact.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.api import build_model
@@ -80,3 +89,119 @@ def calibrate(cfg: ModelConfig, params: Any, bits: int = 8,
     return {"alpha_w": alpha, "fp_bytes": fp_bytes, "q_bytes": q_bytes,
             "dppl": dppl, "ppl_fp": ppl_fp, "ppl_quant": ppl_q,
             "bits": bits}
+
+
+# ---------------------------------------------------------------------------
+# Measured beta: time the REAL engine per (method, batch)
+# ---------------------------------------------------------------------------
+
+
+def _time_tok_s(engine, prompts, caps, bits) -> float:
+    """One timed generate() call -> emitted tokens per second."""
+    t0 = time.perf_counter()
+    result = engine.generate(prompts, n_tokens=caps, quant_bits=bits)
+    dt = time.perf_counter() - t0
+    return float(result.lengths.sum()) / max(dt, 1e-9)
+
+
+def measure_beta(engine, methods: Optional[Sequence] = None,
+                 batches: Sequence[int] = (1, 4, 8), iters: int = 3,
+                 n_tokens: int = 32, prompt_len: int = 8,
+                 min_batch: int = 4, seed: int = 0) -> Dict[str, Any]:
+    """Measure beta (compute-time scale vs fp16) per (method, batch) on a
+    real :class:`ServingEngine`.
+
+    For every batch size, fp and the method's ``serve_bits`` are timed
+    INTERLEAVED (fp, m, fp, m, ...) best-of-``iters`` — back-to-back
+    pairs cancel machine-load drift, best-of cancels one-sided stalls.
+    ``beta = tok_s(fp) / tok_s(method)`` (>1 ⇒ slower than fp); the
+    scalar per-method beta is the median over batches >= ``min_batch``
+    (small batches are latency-bound and noisy — the paper's beta is a
+    throughput-regime number).  Both compilations are warmed before any
+    timer starts.  Returns a JSON-able record (see ``measured_methods``).
+    """
+    from repro.core.quantization import METHODS
+    methods = list(METHODS.values()) if methods is None else list(methods)
+    rng = np.random.default_rng(seed)
+    record: Dict[str, Any] = {"batches": [int(b) for b in batches],
+                              "iters": int(iters),
+                              "backend": jax.default_backend(),
+                              "arch": engine.cfg.arch_id,
+                              "methods": {}}
+    for m in methods:
+        per_batch, fp_per_batch, m_per_batch = {}, {}, {}
+        for b in batches:
+            nb = min(int(b), engine.batch_capacity)
+            prompts = [rng.integers(1, engine.cfg.vocab,
+                                    size=prompt_len).tolist()
+                       for _ in range(nb)]
+            caps = [n_tokens] * nb
+            # warm both executables (compile + quantize-once) off-clock
+            engine.generate(prompts, n_tokens=caps, quant_bits=0)
+            engine.generate(prompts, n_tokens=caps, quant_bits=m.serve_bits)
+            fp_best = q_best = 0.0
+            for _ in range(iters):
+                fp_best = max(fp_best,
+                              _time_tok_s(engine, prompts, caps, 0))
+                q_best = max(q_best, _time_tok_s(engine, prompts, caps,
+                                                 m.serve_bits))
+            per_batch[str(b)] = fp_best / q_best
+            fp_per_batch[str(b)] = fp_best
+            m_per_batch[str(b)] = q_best
+        eligible = [per_batch[str(b)] for b in batches
+                    if int(b) >= min_batch] or list(per_batch.values())
+        record["methods"][m.name] = {
+            "beta": float(np.median(eligible)),
+            "per_batch": per_batch,
+            "tok_s_fp": fp_per_batch,
+            "tok_s": m_per_batch,
+        }
+    return record
+
+
+def attach_alphas(record: Dict[str, Any], params: Any) -> Dict[str, Any]:
+    """Add measured weight alphas (tree-bytes ratios) to a ``measure_beta``
+    record in place, so the SAVED record fully determines the
+    ``measured_methods`` reconstruction (the committed-artifact pinned
+    tests rebuild methods from JSON alone, no re-timing)."""
+    cache: Dict[int, float] = {}
+    for name, meas in record["methods"].items():
+        from repro.core.quantization import METHODS
+        w = METHODS[name].weight_bits
+        if w < 16:
+            if w not in cache:
+                cache[w] = measure_alpha(params, w)[0]
+            meas["alpha_w"] = cache[w]
+    return record
+
+
+def measured_methods(record: Dict[str, Any],
+                     round_to: float = 0.25) -> Dict[str, Any]:
+    """Package a ``measure_beta`` record into real :class:`QuantMethod`
+    records for the scheduler.
+
+    Betas are snapped to a ``round_to`` grid: the scheduler's method
+    ORDERING must not hang on run-to-run timing noise, so methods within
+    the same grid cell are declared speed-equivalent and the descent
+    falls through to the accuracy/memory axes (exactly what makes the
+    measured coefficients change decisions — e.g. when W8A8 and W8A16
+    measure at parity, W8A16's strictly better dPPL Pareto-dominates and
+    W8A8 drops out of the candidate set).  Weight alphas come from the
+    record when ``attach_alphas`` ran; ``alpha_a_measured`` is pinned at
+    1.0 — the engine's KV/activation residency is fp unless the separate
+    ``kv_bits`` path is on, which no weight method changes.
+    """
+    from repro.core.quantization import METHODS
+    out = {}
+    for name, meas in record["methods"].items():
+        base = METHODS[name]
+        beta = meas["beta"]
+        if round_to > 0:
+            beta = round(beta / round_to) * round_to
+        kw: Dict[str, Any] = {"beta": float(beta)}
+        if base.weight_bits < 16:
+            kw["alpha_a_measured"] = 1.0
+            if "alpha_w" in meas:
+                kw["alpha_w_measured"] = float(meas["alpha_w"])
+        out[name] = dataclasses.replace(base, **kw)
+    return out

@@ -44,15 +44,22 @@ class QTensor:
     scale: (..., 1, N) float32.  ``shape``/``dtype`` describe the logical
     dequantized tensor at quantization time; only its last-two dims are
     relied on after pytree slicing (scan strips leading axes).
+
+    ``act_bits`` records the ACTIVATION precision this weight should be
+    consumed at (16 = fp activations, 8 = dynamic per-row int8 -> the
+    W8A8 int8-accumulation kernel).  It rides in the pytree aux so the
+    serving method survives scan slicing and jit boundaries.
     """
     q: jax.Array
     scale: jax.Array
     bits: int
     shape: Tuple[int, ...]
     dtype: Any
+    act_bits: int = 16
 
     def tree_flatten(self):
-        return (self.q, self.scale), (self.bits, self.shape, self.dtype)
+        return (self.q, self.scale), (self.bits, self.shape, self.dtype,
+                                      self.act_bits)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -74,19 +81,24 @@ def pack_int4(q: jax.Array) -> jax.Array:
 
 
 def unpack_int4(packed: jax.Array) -> jax.Array:
-    """Inverse of pack_int4: (..., R/2, C) int8 -> (..., R, C) in [-8, 7]."""
-    lo = (packed & 0x0F).astype(jnp.int8)
-    lo = jnp.where(lo > 7, lo - 16, lo)
-    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
-    hi = jnp.where(hi > 7, hi - 16, hi)
-    out = jnp.stack([lo, hi], axis=-2)           # (..., R/2, 2, C)
-    shape = packed.shape[:-2] + (packed.shape[-2] * 2, packed.shape[-1])
-    return out.reshape(shape)
+    """Inverse of pack_int4: (..., R/2, C) int8 -> (..., R, C) in [-8, 7].
+
+    Index-free even/odd reconstruction: output row r reads packed row
+    r//2 (a repeat along -2, no stack+reshape interleave tile), then a
+    parity-selected shift sign-extends the right nibble — even rows
+    ``(x << 4) >> 4`` (low), odd rows ``x >> 4`` (high), both arithmetic
+    on int8.  Bitwise-identical to the historical stack-based unpack.
+    """
+    rep = jnp.repeat(packed, 2, axis=-2)
+    row = jax.lax.broadcasted_iota(jnp.int32, rep.shape, rep.ndim - 2)
+    lshift = jnp.where(row % 2 == 0, 4, 0).astype(jnp.int8)
+    return ((rep << lshift) >> 4).astype(jnp.int8)
 
 
-def quantize(w: jax.Array, bits: int = 8) -> QTensor:
+def quantize(w: jax.Array, bits: int = 8, act_bits: int = 16) -> QTensor:
     """Per-output-channel symmetric RTN quantization (reduction axis -2)."""
     assert bits in (4, 8), bits
+    assert act_bits in (8, 16), act_bits
     assert w.ndim >= 2, w.shape
     wf = w.astype(jnp.float32)
     qmax = INT4_MAX if bits == 4 else INT8_MAX
@@ -100,7 +112,26 @@ def quantize(w: jax.Array, bits: int = 8) -> QTensor:
             q = jnp.pad(q, pad)
         q = pack_int4(q)
     return QTensor(q=q, scale=scale, bits=bits, shape=tuple(w.shape),
-                   dtype=w.dtype)
+                   dtype=w.dtype, act_bits=act_bits)
+
+
+def quantize_rowwise(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic per-row symmetric activation quantization (absmax / 127).
+
+    x (..., K) -> (int8 values (..., K), f32 scales (..., 1)).  The
+    reduction runs over the full K axis so one scale per row suffices
+    for the whole int32 accumulation of an x @ w contraction — the
+    rescale can then happen ONCE at writeout (kernels/quant_matmul.py).
+    """
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    # multiply by the f32 reciprocal, NOT divide: XLA strength-reduces a
+    # constant-divisor division to this multiply under jit but not in
+    # eager mode, and the kernel/oracle pair needs bitwise-equal scales
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / INT8_MAX), 1.0)
+    q = jnp.clip(jnp.round(xf / scale),
+                 -INT8_MAX - 1, INT8_MAX).astype(jnp.int8)
+    return q, scale
 
 
 def dequantize(t: QTensor) -> jax.Array:
@@ -136,11 +167,17 @@ def _leaf_key(path) -> str:
 
 
 def quantize_tree(params: Params, bits: int = 8,
-                  keys: frozenset = MATMUL_KEYS) -> Params:
-    """Quantize the named matmul leaves; keep everything else fp."""
+                  keys: frozenset = MATMUL_KEYS,
+                  act_bits: int = 16) -> Params:
+    """Quantize the named matmul leaves; keep everything else fp.
+
+    ``act_bits=8`` tags every quantized leaf for int8-activation serving
+    (the W8A8 kernel path); weights themselves are identical to
+    ``act_bits=16`` — the tag only changes how ``common.mm`` consumes
+    them."""
     def maybe(path, w):
         if _leaf_key(path) in keys and _is_weight(w):
-            return quantize(w, bits)
+            return quantize(w, bits, act_bits=act_bits)
         return w
     return jax.tree_util.tree_map_with_path(maybe, params)
 

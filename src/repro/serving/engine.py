@@ -37,9 +37,10 @@ precision, and a per-call ``generate(..., quant_bits=...)`` override lets
 the scheduler serve each epoch at the method it decided.  Each requested
 bit-width is quantized once from the full-precision weights and kept in a
 small multi-precision cache (``params_for``), so swapping precision per
-epoch costs a dict lookup — dense matmuls execute in the Pallas
-dequant-matmul kernel (transformer family; other families dequantize at
-load, see DESIGN.md §3).
+epoch costs a dict lookup.  A precision is an int (weight bits) or a
+``(weight_bits, act_bits)`` pair — W8A8 routes the dense matmuls through
+the int8-accumulation kernel tier on TPU.  On interpret backends every
+family dequantizes at load (see ``params_for`` / DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -56,6 +57,10 @@ from repro.models.api import Model, build_model
 from repro.quant.ptq import dequantize_tree, quantize_tree
 from repro.serving.kv_arena import (TRASH_PAGE, ZERO_PAGE, BlockTable,
                                     KVArena)
+
+# Interpret backends (no TPU) dequantize quantized trees at load and drop
+# activation-precision tags — see ServingEngine.params_for.
+_INTERPRET = jax.default_backend() != "tpu"
 
 
 @dataclass
@@ -89,7 +94,7 @@ class DecodeState:
     done: jax.Array             # (B,) bool, EOS seen
     caps: jax.Array             # (B,) per-row output cap (0 = empty slot)
     t: jax.Array                # scalar i32, cohort decode step
-    bits: int = 0               # weight precision this cohort is served at
+    bits: Any = 0               # precision spec (int or (w, a) pair)
     caps_host: np.ndarray = None  # host mirror of caps (no sync needed)
 
     @property
@@ -116,7 +121,7 @@ class PagedDecodeState:
     done: jax.Array             # (B,) bool, EOS seen
     caps: jax.Array             # (B,) per-row output cap (0 = empty slot)
     t: jax.Array                # scalar i32, cohort decode step
-    bits: int = 0               # weight precision this cohort is served at
+    bits: Any = 0               # precision spec (int or (w, a) pair)
     caps_host: np.ndarray = None  # host mirror of caps (no sync needed)
 
     @property
@@ -187,21 +192,45 @@ class ServingEngine:
     # -- multi-precision weight cache ---------------------------------------
 
     @staticmethod
-    def _canon_bits(bits: Optional[int]) -> int:
-        """0 and 16 both mean full precision (no quantized tree)."""
+    def _canon_bits(bits):
+        """Canonical precision spec.
+
+        Accepts an int (weight bits; 0/16 both mean full precision) or a
+        ``(weight_bits, act_bits)`` pair (a QuantMethod.serve_bits — W8A8
+        serves as ``(8, 8)``).  On interpret backends the activation tag
+        is canonicalized away — quantized trees are dequantized at load
+        there (see ``params_for``), so (8, 8) and 8 would be the same
+        tree and must share one cache entry."""
+        if isinstance(bits, (tuple, list)):
+            w, a = bits
+            w = 0 if not w or w >= 16 else int(w)
+            a = 16 if not a or a >= 16 else int(a)
+            if w == 0 or a == 16 or _INTERPRET:
+                return w
+            return (w, a)
         return 0 if not bits or bits >= 16 else int(bits)
 
-    def params_for(self, bits: Optional[int]):
-        """Weights at ``bits`` precision, quantized once and cached so the
-        scheduler can swap the served method every epoch."""
+    def params_for(self, bits):
+        """Weights at ``bits`` precision (int or (w, a) pair), quantized
+        once and cached so the scheduler can swap the served method every
+        epoch.  On TPU, dense/moe/vlm trees keep their QTensor leaves and
+        serve through the Pallas kernel tiers (W8A16/W4A16, W8A8 when
+        tagged act_bits=8).  On interpret backends EVERY family
+        dequantizes at load: int8 compute cannot beat the f32 BLAS there
+        (measured, DESIGN.md §3), so quantized serving keeps fake-quant
+        numerics but runs fp-speed XLA matmuls — quantization pays in
+        bytes and on TPU, never as an interpret-mode slowdown."""
         bits = self._canon_bits(bits)
         if bits not in self._params_cache:
             if bits == 0:
                 p = self._raw_params
             else:
-                p = quantize_tree(self._raw_params, bits)
-                if self.cfg.family not in ("dense", "moe", "vlm"):
-                    # families whose matmuls don't route through common.mm
+                w, a = bits if isinstance(bits, tuple) else (bits, 16)
+                p = quantize_tree(self._raw_params, w, act_bits=a)
+                if self.cfg.family not in ("dense", "moe", "vlm") \
+                        or _INTERPRET:
+                    # recurrent/encdec matmuls don't route through
+                    # common.mm; interpret backends serve dequantized
                     p = dequantize_tree(p)
             self._params_cache[bits] = p
         return self._params_cache[bits]

@@ -160,7 +160,7 @@ class EngineExecutor(Executor):
             q = decision.quants.get(mid)
             result = engine.generate(
                 prompts, caps,
-                quant_bits=None if q is None else q.weight_bits)
+                quant_bits=None if q is None else q.serve_bits)
             tokens += int(result.lengths.sum())
         return tokens
 
@@ -545,12 +545,13 @@ class EngineContinuousExecutor(ContinuousExecutor):
             return env_r.quant.name
         return f"weight_bits={self.quant_bits}"
 
-    def _cohort_bits(self, pool) -> Optional[int]:
-        """Weight precision a starting cohort is served at: the decided
-        method's width, else the engine-level override, else None (the
-        engine default)."""
+    def _cohort_bits(self, pool):
+        """Precision spec a starting cohort is served at: the decided
+        method's ``serve_bits`` (an int, or a (w, a) pair for W8A8 —
+        routed to the engine's int8-activation tier), else the
+        engine-level override, else None (the engine default)."""
         q = pool["quant"]
-        return q.weight_bits if q is not None else self.quant_bits
+        return q.serve_bits if q is not None else self.quant_bits
 
     def node_headroom(self, mid) -> int:
         """Output tokens a refill into ``mid`` can be promised: the

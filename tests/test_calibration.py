@@ -1,0 +1,144 @@
+"""Measured-beta calibration: the engine-feedback loop into quant=auto.
+
+The flip pin reads the COMMITTED ``experiments/benchmarks/
+calibration_flip.json`` artifact: the saved ``measure_beta`` record (plus
+``attach_alphas``) fully determines the measured method set, so the
+scheduler decisions are re-derived deterministically — no re-timing —
+and the artifact's recorded flips must reproduce forever."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.config import get_arch
+from repro.core.dftsp import dftsp_schedule_auto
+from repro.core.environment import paper_env
+from repro.core.policy import DftspPolicy
+from repro.core.quantization import METHODS, candidate_methods
+from repro.quant.calibration import measured_methods
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "benchmarks", "calibration_flip.json")
+
+
+def _parity_record(alpha_w8=0.52, alpha_w4=0.27):
+    """A measured record on a backend where quantization does NOT pay:
+    every method times at fp parity (exactly what CPU interpret mode
+    measures, since the engine dequantizes at load there)."""
+    rec = {"methods": {}}
+    for name, m in METHODS.items():
+        meas = {"beta": 1.0}
+        if m.weight_bits == 8:
+            meas["alpha_w"] = alpha_w8
+        elif m.weight_bits == 4:
+            meas["alpha_w"] = alpha_w4
+        rec["methods"][name] = meas
+    return rec
+
+
+def test_measured_methods_overrides():
+    ms = measured_methods(_parity_record())
+    assert set(ms) == set(METHODS)
+    for name, m in ms.items():
+        assert m.beta == 1.0
+        if METHODS[name].weight_bits < 16:
+            # engine KV/activations stay fp for weight-quant methods
+            assert m.alpha_a == 1.0
+    assert ms["W8A16"].alpha_w == pytest.approx(0.52)
+    assert ms["W4A16-GPTQ"].alpha_w == pytest.approx(0.27)
+    # the frozen Table-II records are untouched
+    assert METHODS["W8A8"].beta == 0.7
+    assert METHODS["W8A8"].alpha_a == 0.5
+
+
+def test_beta_snap_grid():
+    rec = _parity_record()
+    rec["methods"]["W8A8"]["beta"] = 1.07     # timing noise around parity
+    rec["methods"]["W8A16"]["beta"] = 0.94
+    ms = measured_methods(rec, round_to=0.25)
+    assert ms["W8A8"].beta == 1.0
+    assert ms["W8A16"].beta == 1.0
+    assert measured_methods(rec, round_to=0)["W8A8"].beta == \
+        pytest.approx(1.07)
+
+
+def test_parity_betas_prune_w8a8():
+    """At measured parity, W8A16 Pareto-dominates W8A8 (same alpha/beta,
+    strictly better dPPL) — W8A8 leaves the candidate set, while under
+    Table II it is the FIRST candidate (lowest beta)."""
+    ms = measured_methods(_parity_record())
+    t2 = candidate_methods("bloom-3b")
+    meas = candidate_methods("bloom-3b", methods=list(ms.values()))
+    assert t2[0].name == "W8A8"
+    assert "W8A8" not in {m.name for m in meas}
+    assert meas[0].name == "W16A16"           # beta tie -> best dPPL first
+
+
+def test_pinned_calibration_flip_artifact():
+    """Re-derive both quant=auto decisions from the committed record and
+    pin that the measured coefficients change them."""
+    with open(ARTIFACT) as fh:
+        art = json.load(fh)
+    from benchmarks.calibration_flip import make_queue
+    measured = measured_methods(art["meta"]["record"])
+    for name, beta in art["meta"]["snapped_betas"].items():
+        assert measured[name].beta == beta
+    env = paper_env(art["meta"]["arch"], "W8A16")
+    flips = 0
+    for row in art["rows"]:
+        qseed, _, t2_name, _, m_name, _, flipped = row
+        queue = make_queue(qseed)
+        _, m_t2, _ = dftsp_schedule_auto(env, queue)
+        _, m_meas, _ = dftsp_schedule_auto(env, queue,
+                                           methods=list(measured.values()))
+        assert m_t2.name == t2_name
+        assert m_meas.name == m_name
+        assert (m_t2.name != m_meas.name) == bool(flipped)
+        flips += bool(flipped)
+    assert flips >= 1                          # the calibration is not a no-op
+
+
+def test_policy_calib_measured():
+    env = paper_env("bloom-3b", "W8A16")
+    from benchmarks.calibration_flip import make_queue
+    queue = make_queue(0)
+    pol = DftspPolicy(quant="auto", calib="measured")
+    with pytest.raises(RuntimeError):
+        pol.select_quant(env, None, queue)
+    pol.install_measured(measured_methods(_parity_record()))
+    m = pol.select_quant(env, None, queue)
+    assert m.name != "W8A8"
+    t2 = DftspPolicy(quant="auto").select_quant(env, None, queue)
+    assert t2.name == "W8A8"
+    with pytest.raises(ValueError):
+        DftspPolicy(calib="nope")
+
+
+def test_serve_bits():
+    assert METHODS["W8A16"].serve_bits == 8
+    assert METHODS["W8A8"].serve_bits == (8, 8)
+    assert METHODS["W16A16"].serve_bits == 16
+    assert METHODS["W4A16-GPTQ"].serve_bits == 4
+
+
+def test_measure_beta_smoke():
+    """Structure + sanity of a real (tiny) engine measurement."""
+    from repro.quant.calibration import attach_alphas, measure_beta
+    from repro.serving.engine import ServingEngine
+    cfg = get_arch("bloom-3b").scaled(n_layers=1, d_model=64, n_heads=2,
+                                      n_kv_heads=2, d_ff=128, vocab=256)
+    eng = ServingEngine(cfg, batch_capacity=2, s_max=8, n_max=8,
+                        eos_id=-1, seed=0)
+    rec = measure_beta(eng, methods=[METHODS["W8A16"]], batches=(2,),
+                       iters=1, n_tokens=4, prompt_len=4)
+    attach_alphas(rec, eng._raw_params)
+    m = rec["methods"]["W8A16"]
+    assert m["beta"] > 0 and m["beta"] == m["per_batch"]["2"]
+    assert 0 < m["alpha_w"] < 1
+    assert rec["arch"] == cfg.arch_id
+    ms = measured_methods(rec)
+    assert set(ms) == {"W8A16"}
+    assert dataclasses.is_dataclass(ms["W8A16"])
