@@ -29,6 +29,7 @@ def main(argv=None):
                             quant_kernels as qk,
                             calibration_flip as cf,
                             continuous_vs_epoch as cve,
+                            slo_under_faults as suf,
                             roofline_report as rr)
 
     results = {}
@@ -46,6 +47,7 @@ def main(argv=None):
             ("continuous", cve, {"fast": args.fast}),
             ("multi_continuous", mlc, {"fast": args.fast}),
             ("paged_vs_slab", pvs, {"fast": args.fast}),
+            ("slo_faults", suf, {"fast": args.fast}),
             ("roofline", rr, {})):
         t0 = time.time()
         print(f"\n{'=' * 70}\n[bench] {name}\n{'=' * 70}")

@@ -12,7 +12,21 @@ compare scheduling decisions epoch by epoch, not just aggregates.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy's default method) without
+    importing numpy for a metrics record; 0.0 on an empty sample."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    if len(s) == 1:
+        return float(s[0])
+    pos = (q / 100.0) * (len(s) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    return float(s[lo] + (s[hi] - s[lo]) * (pos - lo))
 
 
 @dataclass
@@ -58,6 +72,10 @@ class EpochTrace:
     # arena pages under the paged engine executor.
     kv_blocks_in_use: List[int] = field(default_factory=list)
     kv_blocks_total: int = 0
+    # SLO / robustness accounting (continuous path, DESIGN.md §2.4)
+    preempted_rids: List[int] = field(default_factory=list)
+    shed_rids: List[int] = field(default_factory=list)
+    faults: int = 0               # transient step faults hit this epoch
 
     @property
     def tokens_per_s(self) -> float:
@@ -102,6 +120,32 @@ class EpochMetrics:
                                   # accounting)
     kv_dead_tokens: int = 0       # Σ per-segment allocated-but-dead KV
                                   # tokens (junk gaps + reserved tail)
+    # -- SLO accounting (DESIGN.md §2.4) ------------------------------------
+    shed: int = 0                 # load-shed under pressure/quarantine
+                                  # (distinct from viability drops)
+    preempted: int = 0            # resident rows evicted at a boundary
+    resumed: int = 0              # preempted rows re-admitted
+    retried: int = 0              # executor step/execute retries after
+                                  # transient faults
+    slo_met: int = 0              # served requests finishing by deadline
+    latencies: List[float] = field(default_factory=list)
+                                  # completion - arrival per served req
+    ttfts: List[float] = field(default_factory=list)
+                                  # first-token time - arrival per served
+    tpots: List[float] = field(default_factory=list)
+                                  # (completion - first token) / tokens
+    in_flight_rids: List[int] = field(default_factory=list)
+                                  # resident when the run ENDED — empty
+                                  # after a clean drain; populated on the
+                                  # partial metrics a DrainStallError
+                                  # carries
+    # -- fault / degradation accounting -------------------------------------
+    faults_injected: int = 0      # transient step faults seen
+    watchdog_trips: int = 0       # step calls exceeding the watchdog
+    quarantined: List[str] = field(default_factory=list)
+                                  # pools quarantined after N consecutive
+                                  # step failures
+    degraded_segments: int = 0    # segments run in degraded mode
 
     @property
     def throughput(self) -> float:
@@ -146,6 +190,35 @@ class EpochMetrics:
         inside leased pages."""
         return self.kv_dead_tokens / self.kv_alloc_tokens \
             if self.kv_alloc_tokens else 0.0
+
+    # -- SLO views ----------------------------------------------------------
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of ARRIVED requests served by their deadline — misses,
+        drops, and shed work all count against attainment (serving 1 of
+        100 on time is not 100% attainment)."""
+        return self.slo_met / self.arrived if self.arrived else 0.0
+
+    @property
+    def p50_latency(self) -> float:
+        return percentile(self.latencies, 50.0)
+
+    @property
+    def p99_latency(self) -> float:
+        return percentile(self.latencies, 99.0)
+
+    @property
+    def p50_ttft(self) -> float:
+        return percentile(self.ttfts, 50.0)
+
+    @property
+    def p99_ttft(self) -> float:
+        return percentile(self.ttfts, 99.0)
+
+    @property
+    def mean_tpot(self) -> float:
+        return sum(self.tpots) / len(self.tpots) if self.tpots else 0.0
 
     @property
     def methods_served(self) -> List[str]:

@@ -53,6 +53,26 @@ class InfeasibleDecisionError(RuntimeError):
     """
 
 
+class DrainStallError(RuntimeError):
+    """The end-of-run drain stopped making progress (a wedged executor,
+    a cohort that can never finish, or the drain bound exhausted).
+
+    Replaces the historical bare ``RuntimeError("continuous drain did
+    not converge")``: instead of losing the whole run, the error carries
+    the PARTIAL :class:`~repro.core.metrics.EpochMetrics` accumulated so
+    far (with ``in_flight_rids`` naming the rows still resident) so
+    callers can account for every request even when the node wedges —
+    the conservation invariant ``arrived == served + dropped + shed +
+    queued + in_flight`` stays checkable from the exception alone.
+    """
+
+    def __init__(self, message: str, metrics=None,
+                 resident_rids: Sequence[int] = ()):
+        super().__init__(message)
+        self.metrics = metrics
+        self.resident_rids = list(resident_rids)
+
+
 @dataclass
 class Decision:
     """One epoch's scheduling outcome: per-model batches + per-model

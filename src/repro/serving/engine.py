@@ -96,6 +96,13 @@ class DecodeState:
     t: jax.Array                # scalar i32, cohort decode step
     bits: Any = 0               # precision spec (int or (w, a) pair)
     caps_host: np.ndarray = None  # host mirror of caps (no sync needed)
+    forced: jax.Array = None    # (B, n_max) forced-replay tokens: a row
+                                # emits forced[i, lengths[i]] instead of
+                                # its argmax while lengths[i] < n_forced[i]
+                                # — the preemption-resume mechanism that
+                                # keeps an already-delivered prefix exact
+                                # (DESIGN.md §2.4); all-zero outside resume
+    n_forced: jax.Array = None  # (B,) forced-prefix length per row
 
     @property
     def batch_capacity(self) -> int:
@@ -123,6 +130,9 @@ class PagedDecodeState:
     t: jax.Array                # scalar i32, cohort decode step
     bits: Any = 0               # precision spec (int or (w, a) pair)
     caps_host: np.ndarray = None  # host mirror of caps (no sync needed)
+    forced: jax.Array = None    # (B, n_max) forced-replay tokens (see
+                                # DecodeState.forced)
+    n_forced: jax.Array = None  # (B,) forced-prefix length per row
 
     @property
     def batch_capacity(self) -> int:
@@ -285,7 +295,7 @@ class ServingEngine:
         return out, lengths
 
     def _decode_chunk_fn(self, params, cache, cur, out, lengths, done,
-                         caps, t, t_end):
+                         caps, t, t_end, forced, n_forced):
         """One re-entrant SEGMENT of the fused decode loop.
 
         Identical per-step ops to ``_decode_loop_fn``, but (a) the carried
@@ -297,6 +307,14 @@ class ServingEngine:
         their row of ``out`` from 0.  ``t_end`` bounds this segment;
         passing it as an operand keeps ONE compiled executable for every
         chunk size k.
+
+        While ``lengths[i] < n_forced[i]`` a row emits (and feeds the
+        model) ``forced[i, lengths[i]]`` instead of its argmax — the
+        preempt-resume replay: a resumed row re-prefills its ORIGINAL
+        prompt and replays the tokens it already delivered, pinning the
+        user-visible prefix bit-exactly regardless of the cohort
+        alignment it rejoins at (DESIGN.md §2.4).  ``n_forced`` is zero
+        outside resume, making the override a no-op.
         """
         B = cur.shape[0]
         rows = jnp.arange(B)
@@ -312,6 +330,7 @@ class ServingEngine:
             cache, cur, out, lengths, done, t = state
             alive = alive_mask(done, lengths)
             idx = jnp.minimum(lengths, self.n_max - 1)
+            cur = jnp.where(lengths < n_forced, forced[rows, idx], cur)
             out = out.at[rows, idx].set(
                 jnp.where(alive, cur, out[rows, idx]))
             lengths = lengths + alive.astype(jnp.int32)
@@ -371,10 +390,12 @@ class ServingEngine:
     # -- paged-arena compiled step functions (DESIGN.md §2.3) ----------------
 
     def _decode_chunk_paged_fn(self, params, pages, table, cur, out,
-                               lengths, done, caps, t, t_end):
+                               lengths, done, caps, t, t_end, forced,
+                               n_forced):
         """The re-entrant decode segment over the PAGED cache: identical
-        per-step ops to ``_decode_chunk_fn`` but the KV reads/writes go
-        through ``model.decode_step_paged`` — the node-wide page buffers
+        per-step ops to ``_decode_chunk_fn`` (including the forced-replay
+        override) but the KV reads/writes go through
+        ``model.decode_step_paged`` — the node-wide page buffers
         are the carried cache and the cohort's block table (static within
         a segment; rows only change at admission/release boundaries) is
         an operand."""
@@ -392,6 +413,7 @@ class ServingEngine:
             pages, cur, out, lengths, done, t = state
             alive = alive_mask(done, lengths)
             idx = jnp.minimum(lengths, self.n_max - 1)
+            cur = jnp.where(lengths < n_forced, forced[rows, idx], cur)
             out = out.at[rows, idx].set(
                 jnp.where(alive, cur, out[rows, idx]))
             lengths = lengths + alive.astype(jnp.int32)
@@ -578,27 +600,53 @@ class ServingEngine:
         b_w = min((self.s_max + t) // block_tokens, nb - 1)
         return nb - max(0, b_w - npb)
 
+    def _forced_buffers(self, prefixes, slots=None):
+        """Host (B, n_max) forced-replay token buffer + (B,) lengths from
+        per-row resume prefixes (``None`` entries = no replay).  ``slots``
+        maps prefix i to its row (defaults to ``0..len-1``)."""
+        B = self.batch_capacity
+        forced = np.zeros((B, self.n_max), np.int32)
+        nf = np.zeros((B,), np.int32)
+        if prefixes is not None:
+            rows = range(len(prefixes)) if slots is None else slots
+            for row, pre in zip(rows, prefixes):
+                if pre is not None and len(pre):
+                    pre = list(pre)[:self.n_max]
+                    forced[row, :len(pre)] = pre
+                    nf[row] = len(pre)
+        return forced, nf
+
     def start_chunked(self, prompts: Sequence[Sequence[int]],
                       n_tokens: Optional[Sequence[int]] = None,
                       quant_bits: Optional[int] = None,
-                      arena: Optional[KVArena] = None):
+                      arena: Optional[KVArena] = None,
+                      prefixes: Optional[Sequence] = None):
         """Prefill a new cohort and return its device-resident decode
         state (ONE host→device transfer; decoding hasn't started).
         Prompts occupy slots ``0..len(prompts)-1``; the remaining slots
         are empty (cap 0) and refillable.  With ``arena=`` the cohort is
         arena-backed: the prefill cache is scattered block-wise into
-        leased pages and a :class:`PagedDecodeState` is returned."""
+        leased pages and a :class:`PagedDecodeState` is returned.
+        ``prefixes`` seeds per-row forced-replay tokens (one entry per
+        prompt, ``None`` = fresh row) for preemption resume — see
+        ``_decode_chunk_fn``."""
         params, bits, batch, caps_j, caps, _ = self._prepare(
             prompts, n_tokens, quant_bits)
         cur, cache = self._prefill(params, batch)
         B = self.batch_capacity
+        if prefixes is None:       # keep the one-put-at-start invariant
+            forced = jnp.zeros((B, self.n_max), jnp.int32)
+            nf = jnp.zeros((B,), jnp.int32)
+        else:
+            forced, nf = jax.device_put(self._forced_buffers(prefixes))
         if arena is None:
             return DecodeState(
                 cache=cache, cur=cur,
                 out=jnp.zeros((B, self.n_max), jnp.int32),
                 lengths=jnp.zeros((B,), jnp.int32),
                 done=jnp.zeros((B,), bool),
-                caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps)
+                caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps,
+                forced=forced, n_forced=nf)
         assert self.paged_capable, self.cfg.arch_id
         bt = arena.block_tokens
         assert self.cache_len % bt == 0, (self.cache_len, bt)
@@ -618,7 +666,8 @@ class ServingEngine:
             out=jnp.zeros((B, self.n_max), jnp.int32),
             lengths=jnp.zeros((B,), jnp.int32),
             done=jnp.zeros((B,), bool),
-            caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps)
+            caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps,
+            forced=forced, n_forced=nf)
 
     def generate_chunked(self, state, k: int):
         """Advance a cohort by AT MOST ``k`` decode steps (one jitted
@@ -636,13 +685,14 @@ class ServingEngine:
             pages, cur, out, lengths, done, t = self._decode_chunk_paged(
                 params, state.arena.buffers(), state.table.device,
                 state.cur, state.out, state.lengths, state.done,
-                state.caps, state.t, t_end)
+                state.caps, state.t, t_end, state.forced, state.n_forced)
             state.arena.set_buffers(pages)
             return dataclasses.replace(state, cur=cur, out=out,
                                        lengths=lengths, done=done, t=t)
         cache, cur, out, lengths, done, t = self._decode_chunk(
             params, state.cache, state.cur, state.out, state.lengths,
-            state.done, state.caps, state.t, t_end)
+            state.done, state.caps, state.t, t_end, state.forced,
+            state.n_forced)
         return dataclasses.replace(state, cache=cache, cur=cur, out=out,
                                    lengths=lengths, done=done, t=t)
 
@@ -690,10 +740,36 @@ class ServingEngine:
         emit before the shared cache position hits capacity."""
         return max(0, self.n_max - t)
 
+    def evict_slots(self, state, slots: Sequence[int]):
+        """Preempt resident rows at a segment boundary: flag them done
+        and zero their caps so the next segment treats them exactly like
+        finished rows (dead rows keep stepping; their writes are
+        don't-care scatters).  Paged rows additionally return their page
+        leases, so the freed memory is allocatable at the very next
+        admission boundary.  The caller is responsible for having
+        polled any progress it wants to spill BEFORE evicting."""
+        slots = list(slots)
+        if not slots:
+            return state
+        B = self.batch_capacity
+        mask = np.zeros((B,), bool)
+        mask[slots] = True
+        mask_j = jax.device_put(mask)
+        done = jnp.where(mask_j, True, state.done)
+        caps = jnp.where(mask_j, 0, state.caps)
+        caps_host = np.where(mask, 0, state.caps_host)
+        if isinstance(state, PagedDecodeState):
+            for slot in slots:
+                state.arena.free(state.table.row_leases(slot))
+                state.table.clear_row(slot)
+        return dataclasses.replace(state, done=done, caps=caps,
+                                   caps_host=caps_host)
+
     def refill_chunked(self, state, slots: Sequence[int],
                        prompts: Sequence[Sequence[int]],
                        n_tokens: Sequence[int], t_now: int,
-                       cap_max: Optional[int] = None):
+                       cap_max: Optional[int] = None,
+                       prefixes: Optional[Sequence] = None):
         """Prefill new prompts into freed slots of a LIVE cohort.
 
         The new prompts are padded into their slot rows, prefilled as one
@@ -736,6 +812,18 @@ class ServingEngine:
         toks_j, caps_j, refill_j = jax.device_put((toks, new_caps, refill))
         new_cur, new_cache = self._prefill(params, self._as_batch(toks_j))
         caps_host = np.where(refill, new_caps, state.caps_host)
+        # Forced-replay splice (preemption resume): refilled rows take
+        # their resume prefix (or reset to no-replay); live rows keep
+        # theirs.  Outside the jitted merges — it's a few KB — and the
+        # no-resume path skips the extra transfer entirely.
+        if prefixes is None:
+            forced = jnp.where(refill_j[:, None], 0, state.forced)
+            n_forced = jnp.where(refill_j, 0, state.n_forced)
+        else:
+            forced_j, nf_j = jax.device_put(
+                self._forced_buffers(prefixes, slots=slots))
+            forced = jnp.where(refill_j[:, None], forced_j, state.forced)
+            n_forced = jnp.where(refill_j, nf_j, state.n_forced)
         if isinstance(state, PagedDecodeState):
             arena = state.arena
             bt = arena.block_tokens
@@ -759,13 +847,15 @@ class ServingEngine:
                 state.caps, caps_j, refill_j)
             return dataclasses.replace(state, cur=cur, out=out,
                                        lengths=lengths, done=done,
-                                       caps=caps, caps_host=caps_host)
+                                       caps=caps, caps_host=caps_host,
+                                       forced=forced, n_forced=n_forced)
         cache, cur, out, lengths, done, caps = self._refill_merge(
             state.cache, new_cache, state.cur, new_cur, state.out,
             state.lengths, state.done, state.caps, caps_j, refill_j)
         return dataclasses.replace(state, cache=cache, cur=cur, out=out,
                                    lengths=lengths, done=done, caps=caps,
-                                   caps_host=caps_host)
+                                   caps_host=caps_host,
+                                   forced=forced, n_forced=n_forced)
 
     def generate_via_chunks(self, prompts: Sequence[Sequence[int]],
                             n_tokens: Optional[Sequence[int]] = None,

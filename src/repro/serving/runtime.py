@@ -54,10 +54,14 @@ import numpy as np
 from repro.core.environment import EdgeEnv
 from repro.core.metrics import EpochMetrics, EpochTrace
 from repro.core.multi import MultiLLMEnv, multi_feasible
-from repro.core.policy import (Decision, InfeasibleDecisionError,
+from repro.core.policy import (Decision, DrainStallError,
+                               InfeasibleDecisionError,
                                SchedulerPolicy, as_policy)
-from repro.core.quantization import QuantMethod
+from repro.core.quantization import QuantMethod, candidate_methods
 from repro.core.request import Request, RequestGenerator
+from repro.serving.faults import TransientStepError
+from repro.serving.slo import (DegradationController, SpillRecord,
+                               edf_order, pick_victim)
 
 Env = Union[EdgeEnv, MultiLLMEnv]
 
@@ -262,7 +266,22 @@ class EpochRuntime:
             # real executors block on the result (ServingEngine.generate
             # device_gets), so this wall-clock is the data plane's t_A+t_I
             t_exec = time.perf_counter()
-            tokens = self.executor.execute(self.env, decision)
+            tokens, n_faults = 0, 0
+            for attempt in range(4):
+                # bounded retry: a TransientStepError is raised BEFORE
+                # the data plane mutated anything (serving/faults.py),
+                # so replaying the epoch's execute is safe; after the
+                # retry budget the epoch proceeds unexecuted (analytic
+                # charging is unaffected; the fault is accounted).
+                try:
+                    tokens = self.executor.execute(self.env, decision)
+                    break
+                except TransientStepError:
+                    n_faults += 1
+                    if counting:
+                        m.faults_injected += 1
+                        if attempt < 3:
+                            m.retried += 1
             wall_s = time.perf_counter() - t_exec
 
             sel = decision.selected
@@ -289,7 +308,7 @@ class EpochRuntime:
                 selected_rids=[r.rid for r in sel], truncated=len(spilled),
                 nodes_visited=decision.stats.nodes_visited,
                 generated_tokens=tokens, counted=counting,
-                quants=quants, wall_s=wall_s))
+                quants=quants, wall_s=wall_s, faults=n_faults))
 
             chosen = {r.rid for r in sel}
             queue = [r for r in queue if r.rid not in chosen]
@@ -341,7 +360,7 @@ class ContinuousExecutor:
         with."""
         pool = self._pools[mid]
         return list(pool["resident"].values()) \
-            + [r for _, r in pool["pending"]]
+            + [r for _, r, _ in pool["pending"]]
 
     def free_slots(self, mid: Optional[str]) -> int:
         pool = self._pools[mid]
@@ -353,14 +372,41 @@ class ContinuousExecutor:
         job, via ``policy.validate``)."""
         return mid in self._pools and self.free_slots(mid) > 0
 
-    def place(self, mid: Optional[str], r: Request) -> None:
+    def place(self, mid: Optional[str], r: Request,
+              resume: Optional[dict] = None) -> None:
         """Claim the lowest free slot for an admitted request; the refill
         executes at the start of the next ``step`` (engines batch all of
-        a boundary's admissions into ONE prefill)."""
+        a boundary's admissions into ONE prefill).  ``resume`` is the
+        opaque payload a prior ``preempt`` of this request returned —
+        the subclass restores the spilled progress when the refill
+        lands."""
         pool = self._pools[mid]
-        taken = set(pool["resident"]) | {s for s, _ in pool["pending"]}
+        taken = set(pool["resident"]) | {s for s, _, _ in pool["pending"]}
         slot = min(s for s in range(pool["capacity"]) if s not in taken)
-        pool["pending"].append((slot, r))
+        pool["pending"].append((slot, r, resume))
+
+    def evictable(self, mid: Optional[str]) -> List[Request]:
+        """Rows preemption may evict: resident ON the data plane.
+        Pending refills are excluded — they were admitted this very
+        boundary and have not prefilled yet, so evicting them would
+        churn admissions without freeing any device state."""
+        return list(self._pools[mid]["resident"].values())
+
+    def preempt(self, mid: Optional[str], rid: int) -> dict:
+        """Evict the RESIDENT request ``rid`` from its slot at a segment
+        boundary, returning the opaque resume payload a later
+        ``place(..., resume=)`` restores (DESIGN.md §2.4).  Slot and any
+        physical KV are released immediately; the runtime owns the
+        re-queue/backoff/attempt bookkeeping."""
+        raise NotImplementedError
+
+    def evacuate(self, mid: Optional[str]) -> List[Request]:
+        """Empty pool ``mid`` entirely — resident AND pending — and
+        return the removed requests.  Quarantine support: the runtime
+        sheds (or re-queues) the returned work with explicit accounting;
+        the pool is left clean so a later un-quarantine could reuse
+        it."""
+        raise NotImplementedError
 
     def idle(self) -> bool:
         return all(not p["resident"] and not p["pending"]
@@ -448,9 +494,12 @@ class AnalyticContinuousExecutor(ContinuousExecutor):
     def step(self, env, k):
         finished, occupied, capacity = [], 0, 0
         for mid, pool in self._pools.items():
-            for slot, r in pool["pending"]:
+            for slot, r, resume in pool["pending"]:
                 pool["resident"][slot] = r
-                pool["remaining"][slot] = r.n
+                # a resumed request keeps its spilled progress: only the
+                # tokens it had NOT yet emitted remain to be served
+                pool["remaining"][slot] = resume["remaining"] \
+                    if resume is not None else r.n
             pool["pending"].clear()
             occupied += len(pool["resident"])
             capacity += pool["capacity"]
@@ -461,6 +510,21 @@ class AnalyticContinuousExecutor(ContinuousExecutor):
                     del pool["resident"][slot]
                     del pool["remaining"][slot]
         return finished, occupied / capacity if capacity else 0.0
+
+    def preempt(self, mid, rid):
+        pool = self._pools[mid]
+        slot = next(s for s, r in pool["resident"].items() if r.rid == rid)
+        del pool["resident"][slot]
+        return {"remaining": pool["remaining"].pop(slot)}
+
+    def evacuate(self, mid):
+        pool = self._pools[mid]
+        removed = list(pool["resident"].values()) \
+            + [r for _, r, _ in pool["pending"]]
+        pool["resident"].clear()
+        pool["remaining"].clear()
+        pool["pending"].clear()
+        return removed
 
 
 class EngineContinuousExecutor(ContinuousExecutor):
@@ -528,7 +592,11 @@ class EngineContinuousExecutor(ContinuousExecutor):
         eng = self.engines[mid]
         paged = self.arena is not None and eng.paged_capable \
             and eng.cache_len % self.arena.block_tokens == 0
-        pool.update(engine=eng, state=None, t=0, paged=paged)
+        # prompts: slot -> synthesized prompt of the resident row.  Kept
+        # because preemption resume must re-prefill the IDENTICAL prompt
+        # (synthesis is rng-driven and unrepeatable) — dropped again the
+        # moment the row finishes.
+        pool.update(engine=eng, state=None, t=0, paged=paged, prompts={})
         return pool
 
     def _capacity(self, mid) -> int:
@@ -598,12 +666,12 @@ class EngineContinuousExecutor(ContinuousExecutor):
             return True     # fresh cohort: full n_max headroom of its own
         return self.node_headroom(mid) >= min(r.n, pool["engine"].n_max)
 
-    def place(self, mid, r):
+    def place(self, mid, r, resume=None):
         # reserve the candidate's worst-case pages against this boundary
         # so a burst of same-boundary admissions can't jointly overdraw
         # the arena (released again once the refill actually leases)
         self._pending_pages += self._pages_needed(mid)
-        super().place(mid, r)
+        super().place(mid, r, resume)
 
     def step(self, env, k):
         finished, occupied, capacity = [], 0, 0
@@ -617,18 +685,38 @@ class EngineContinuousExecutor(ContinuousExecutor):
         for mid, pool in self._pools.items():
             eng = pool["engine"]
             if pool["pending"]:
-                slots = [s for s, _ in pool["pending"]]
-                reqs = [r for _, r in pool["pending"]]
-                prompts, caps = eng.synth_prompts(reqs, self.rng)
+                slots = [s for s, _, _ in pool["pending"]]
+                reqs = [r for _, r, _ in pool["pending"]]
+                prompts, caps, prefixes = [], [], []
+                for slot, r, resume in pool["pending"]:
+                    if resume is None:
+                        # same rng draw order as the historical batched
+                        # synth call — fresh admissions are bit-stable
+                        p, c = eng.synth_prompts([r], self.rng)
+                        prompts.append(p[0])
+                        caps.append(c[0])
+                        prefixes.append(None)
+                    else:
+                        # resume: re-prefill the ORIGINAL prompt and
+                        # replay the delivered prefix bit-exactly via
+                        # the engine's forced-prefix mechanism
+                        prompts.append(resume["prompt"])
+                        caps.append(min(r.n, eng.n_max))
+                        prefixes.append(resume["prefix"])
+                    pool["prompts"][slot] = prompts[-1]
+                if all(p is None for p in prefixes):
+                    prefixes = None
                 if pool["state"] is None:
                     pool["state"] = eng.start_chunked(
                         prompts, caps, quant_bits=self._cohort_bits(pool),
-                        arena=self.arena if pool["paged"] else None)
+                        arena=self.arena if pool["paged"] else None,
+                        prefixes=prefixes)
                     pool["t"] = 0
                 else:
                     pool["state"] = eng.refill_chunked(
                         pool["state"], slots, prompts, caps,
-                        t_now=pool["t"], cap_max=clamps[mid])
+                        t_now=pool["t"], cap_max=clamps[mid],
+                        prefixes=prefixes)
                 pool["resident"].update(zip(slots, reqs))
                 pool["pending"].clear()
         self._pending_pages = 0     # reservations became real leases
@@ -653,6 +741,7 @@ class EngineContinuousExecutor(ContinuousExecutor):
                         self.outputs[r.rid] = \
                             np.array(out[slot][:lengths[slot]])
                     del pool["resident"][slot]
+                    pool["prompts"].pop(slot, None)
                     freed.append(slot)
             if pool["paged"] and freed:
                 # release-on-completion: the freed pages are allocatable
@@ -663,6 +752,44 @@ class EngineContinuousExecutor(ContinuousExecutor):
                     eng.release_all(pool["state"])
                 pool["state"], pool["t"] = None, 0   # cohort drained
         return finished, occupied / capacity if capacity else 0.0
+
+    def preempt(self, mid, rid):
+        """Evict a resident row: spill its delivered tokens (one full
+        poll), kill the row via ``evict_slots`` (paged leases return to
+        the arena immediately), and hand back the original prompt plus
+        the delivered prefix — everything resume needs to re-prefill and
+        replay the request bit-exactly (DESIGN.md §2.4)."""
+        pool = self._pools[mid]
+        eng = pool["engine"]
+        slot = next(s for s, r in pool["resident"].items() if r.rid == rid)
+        out, lengths, done, t = eng.poll_chunked(pool["state"])
+        prefix = [int(x) for x in out[slot][:lengths[slot]]]
+        pool["state"] = eng.evict_slots(pool["state"], [slot])
+        del pool["resident"][slot]
+        prompt = pool["prompts"].pop(slot)
+        if not pool["resident"] and not pool["pending"]:
+            if pool["paged"]:
+                eng.release_all(pool["state"])
+            pool["state"], pool["t"] = None, 0
+        return {"prompt": prompt, "prefix": prefix}
+
+    def evacuate(self, mid):
+        pool = self._pools[mid]
+        eng = pool["engine"]
+        removed = list(pool["resident"].values()) \
+            + [r for _, r, _ in pool["pending"]]
+        if pool["state"] is not None:
+            eng.evict_slots(pool["state"], list(pool["resident"]))
+            if pool["paged"]:
+                eng.release_all(pool["state"])
+        pool["resident"].clear()
+        pool["pending"].clear()
+        pool["prompts"].clear()
+        pool["state"], pool["t"] = None, 0
+        # NOTE: page reservations made for the cleared pendings stay in
+        # ``_pending_pages`` until the next successful step resets it —
+        # conservatively strict admission, never an arena overdraw.
+        return removed
 
     def block_usage(self):
         if self.arena is None:
@@ -685,11 +812,15 @@ class ContinuousRuntime(EpochRuntime):
     Same arrival / aging / viability-drop bookkeeping on the same epoch
     grid, but each epoch is split into ``segments_per_epoch`` chunked
     decode segments and ADMISSION happens at every segment boundary:
-    FIFO first-fit over the queue, each candidate gated by
-    ``policy.validate()`` on (resident ∪ candidate) — the paper's P1
-    feasibility oracle reused as the admission-control contract, so no
-    slot refill can violate the constraint set the scheduler enforces at
-    epoch boundaries.  On a ``MultiLLMEnv`` the gate is NODE-WIDE: the
+    first-fit over the queue in arrival order (``admission="fifo"``,
+    the throughput default) or EDF-within-priority order
+    (``admission="edf"``, the SLO stack — pair it with
+    ``deadline_gated=True`` so overload does not burn slots on doomed
+    tight-deadline work), each candidate
+    gated by ``policy.validate()`` on (resident ∪ candidate) — the
+    paper's P1 feasibility oracle reused as the admission-control
+    contract, so no slot refill can violate the constraint set the
+    scheduler enforces at epoch boundaries.  On a ``MultiLLMEnv`` the gate is NODE-WIDE: the
     joint resident batch across every hosted cohort is additionally
     re-checked against ``multi_feasible`` (raising
     ``InfeasibleDecisionError`` on a policy whose oracle is only
@@ -705,18 +836,68 @@ class ContinuousRuntime(EpochRuntime):
     contract the two agree on epoch attribution).  After the last epoch
     the resident cohorts DRAIN to completion (bounded by one cohort
     span), attributed to the final epoch — so for ``warmup_epochs=0``
-    conservation holds exactly: ``arrived == served + dropped +
-    len(final_queue_rids)``.
+    conservation holds exactly, in its overload-hardened form
+    (DESIGN.md §2.4)::
+
+        arrived == served + dropped + shed
+                   + len(final_queue_rids) + len(in_flight_rids)
+
+    where ``shed`` is degradation/quarantine load shedding (distinct
+    from viability drops) and ``in_flight_rids`` is empty except on the
+    partial metrics a :class:`DrainStallError` carries.  Preemption
+    (``preemption=True``) moves resident rows back to the queue with
+    their progress spilled — the engine path resumes them by
+    re-prefilling the ORIGINAL prompt and replaying the delivered
+    prefix bit-exactly (forced-prefix decode; see
+    ``ServingEngine._decode_chunk_fn``) — so preempted work is never
+    double-counted in any bucket.  Transient data-plane faults
+    (serving/faults.py) are retried up to ``retry_limit`` times per
+    boundary; ``quarantine_after`` consecutive failures of one pool
+    evacuate and quarantine it (shed, with accounting); ``watchdog_s``
+    arms a wall-clock alarm around every step; and a
+    :class:`DegradationController` lets the runtime trade precision for
+    pressure relief with hysteresis.
     """
 
     def __init__(self, env: Env, policy: Union[str, SchedulerPolicy],
                  executor: ContinuousExecutor, k: int = 4,
-                 segments_per_epoch: Optional[int] = None):
+                 segments_per_epoch: Optional[int] = None,
+                 admission: str = "fifo",
+                 deadline_gated: bool = False,
+                 preemption: bool = False,
+                 max_preemptions: int = 2,
+                 backoff_boundaries: int = 2,
+                 retry_limit: int = 3,
+                 quarantine_after: int = 5,
+                 watchdog_s: Optional[float] = None,
+                 degradation: Optional[DegradationController] = None,
+                 drain_limit: int = 100_000):
         super().__init__(env, policy)
         self.executor = self.cexec = executor
         self.k = int(k)
         self.segments_per_epoch = segments_per_epoch or max(
             1, math.ceil(executor.tokens_per_epoch() / self.k))
+        # -- SLO / robustness knobs (DESIGN.md §2.4) -------------------------
+        assert admission in ("edf", "fifo"), admission
+        self.admission = admission          # queue order at admission:
+                                            # EDF-within-priority or FIFO
+        self.deadline_gated = deadline_gated  # skip candidates that
+                                            # cannot finish by deadline
+        self.preemption = preemption        # evict looser residents for
+                                            # tighter candidates
+        self.max_preemptions = max_preemptions    # eviction cap per request
+        self.backoff_boundaries = backoff_boundaries  # resume backoff,
+                                            # linear in attempts
+        self.retry_limit = retry_limit      # step retries per boundary on
+                                            # transient faults
+        self.quarantine_after = quarantine_after  # consecutive pool
+                                            # failures before quarantine
+        self.watchdog_s = watchdog_s        # wall-clock deadline per step
+                                            # (None = unarmed)
+        self.degradation = degradation      # graceful-degradation
+                                            # hysteresis (None = off)
+        self.drain_limit = drain_limit      # post-run drain segments
+                                            # before DrainStallError
 
     # -- admission: validate()-gated first-fit -------------------------------
 
@@ -746,21 +927,68 @@ class ContinuousRuntime(EpochRuntime):
                 f"per-model feasibility does not compose on shared node "
                 f"budgets")
 
-    def _try_admit(self, queue: List[Request],
-                   trace: EpochTrace) -> List[Request]:
-        """Admit queued requests into free slots, FIFO first-fit, each
-        gated by the policy's own feasibility oracle on the joint
-        resident-plus-candidate batch — evaluated under every active
-        cohort's decided quantization method — then re-checked against
-        the joint ``multi_feasible`` oracle on multi-LLM nodes.  The
-        resident view is built once per boundary and updated
-        incrementally as candidates land.
+    def _admission_order(self, queue: List[Request]) -> List[Request]:
+        """The order admission considers the queue in: plain arrival
+        order (``admission="fifo"``, the throughput default) or EDF
+        within priority classes (``admission="edf"``, the SLO stack)."""
+        return edf_order(queue) if self.admission == "edf" \
+            else list(queue)
+
+    def _hopeless(self, r: Request,
+                  rec: Optional[SpillRecord]) -> bool:
+        """Deadline-aware admission filter (``deadline_gated=True``):
+        a candidate that cannot finish by its deadline even if served
+        IMMEDIATELY — earliest finish = current boundary + one segment
+        per k tokens — is never worth a slot.  Unlike the optimistic
+        lone-compute bound ``still_viable`` drops on, this uses the
+        runtime's own segment grid, so under overload EDF stops burning
+        capacity on doomed tight-deadline work (the classic EDF overload
+        collapse).  A spilled analytic request is judged on its
+        REMAINING tokens; an engine resume replays its full prefix
+        through the forced-token path, so it is judged on the full n."""
+        n = r.n
+        if rec is not None and "remaining" in rec.payload:
+            n = rec.payload["remaining"]
+        dt = self.T_E / self.segments_per_epoch
+        t_fin = self._tnow + math.ceil(max(1, int(n)) / self.k) * dt
+        return t_fin > r.deadline + 1e-9
+
+    def _degraded_quant(self, mid: Optional[str],
+                        reqs: List[Request]) -> Optional[QuantMethod]:
+        """Degraded-mode cohort method: the FASTEST admissible method
+        for the prospective pool — accuracy floors stay binding
+        (``candidate_methods`` prefilters on the batch's a_i), but the
+        throughput-vs-accuracy descent is skipped in favor of minimum
+        compute time (min beta) while the node is under pressure."""
+        env_r = self.env.envs[mid] if isinstance(self.env, MultiLLMEnv) \
+            else self.env
+        cands = candidate_methods(
+            env_r.model.arch_id,
+            accuracies=[r.a for r in reqs] if reqs else None)
+        return cands[0] if cands else None
+
+    def _try_admit(self, queue: List[Request], trace: EpochTrace,
+                   degraded: bool = False) -> List[Request]:
+        """Admit queued requests into free slots — first-fit in
+        ``_admission_order`` — each gated by the policy's own
+        feasibility oracle on the joint resident-plus-candidate batch —
+        evaluated under every active cohort's decided quantization
+        method — then re-checked against the joint ``multi_feasible``
+        oracle on multi-LLM nodes.  The resident view is built once per
+        boundary and updated incrementally as candidates land.
 
         The first admission into an empty pool STARTS a cohort: the
         policy picks its quantization method (``select_quant``, the
-        PR-2 descent for ``quant=auto`` policies) over the queued
-        requests targeting that model, the executor pins the cohort to
-        it, and the choice is recorded in ``trace.quants``."""
+        PR-2 descent for ``quant=auto`` policies; the fastest
+        admissible method while ``degraded``) over the queued requests
+        targeting that model, the executor pins the cohort to it, and
+        the choice is recorded in ``trace.quants``.
+
+        Quarantined pools admit nothing, and a preempted request still
+        inside its backoff window (``SpillRecord.not_before``) is
+        skipped this boundary; when a spilled request IS re-admitted,
+        its resume payload rides along so the executor restores the
+        spilled progress."""
         admitted: List[Request] = []
         cexec = self.cexec
         batches = {m: cexec.resident(m) for m in cexec.pool_ids()}
@@ -769,16 +997,24 @@ class ContinuousRuntime(EpochRuntime):
         quants = {m: q for m in cexec.pool_ids()
                   if batches[m] and (q := cexec.quant_of(m)) is not None}
         fresh_sel: Dict[Optional[str], Optional[QuantMethod]] = {}
-        for r in queue:
+        for r in self._admission_order(queue):
             mid = r.model_id
+            if mid in self._quarantined:
+                continue
+            rec = self._spills.get(r.rid)
+            if rec is not None and self._boundary < rec.not_before:
+                continue               # resume backoff not yet elapsed
+            if self.deadline_gated and self._hopeless(r, rec):
+                continue               # can't finish by deadline anyway
             if mid not in batches or not cexec.accepts(mid, r):
                 continue
             starting = not batches[mid]
             if starting:
                 if mid not in fresh_sel:
-                    fresh_sel[mid] = self.policy.select_quant(
-                        self.env, mid,
-                        [x for x in queue if x.model_id == mid])
+                    pool_reqs = [x for x in queue if x.model_id == mid]
+                    fresh_sel[mid] = self._degraded_quant(mid, pool_reqs) \
+                        if degraded else self.policy.select_quant(
+                            self.env, mid, pool_reqs)
                 q = fresh_sel[mid]
             else:
                 q = quants.get(mid)
@@ -793,13 +1029,165 @@ class ContinuousRuntime(EpochRuntime):
                     if q is not None:
                         trace.quants[mid] = q.name
                 quants = trial
-                cexec.place(mid, r)
+                cexec.place(mid, r,
+                            resume=rec.payload if rec is not None else None)
                 admitted.append(r)
             else:
                 batches[mid].pop()
         if admitted:
             self._assert_jointly_feasible(batches, quants)
         return admitted
+
+    def _try_preempt(self, queue: List[Request], trace: EpochTrace,
+                     m: EpochMetrics, counting: bool
+                     ) -> Tuple[List[Request], List[Request]]:
+        """Priority preemption at a segment boundary (DESIGN.md §2.4).
+
+        For each still-queued candidate (in admission order) whose pool
+        is slot-bound, find a resident victim the candidate strictly
+        beats (``pick_victim``: higher priority class, or same class
+        with an earlier deadline), check the policy oracle still holds
+        on the swapped batch, then evict the victim — spilling its
+        progress into a :class:`SpillRecord` — and admit the candidate
+        into the freed slot.  Victims re-enter the queue and resume
+        later via their spill payload; a victim already evicted
+        ``max_preemptions`` times is pinned (never evicted again), and
+        each eviction pushes the victim's earliest re-admission out by
+        ``backoff_boundaries × attempts`` segment boundaries.
+
+        Returns ``(admitted_candidates, requeued_victims)``."""
+        cexec = self.cexec
+        admitted: List[Request] = []
+        requeued: List[Request] = []
+        if not queue:
+            return admitted, requeued
+        batches = {mm: cexec.resident(mm) for mm in cexec.pool_ids()}
+        quants = {mm: q for mm in cexec.pool_ids()
+                  if batches[mm] and (q := cexec.quant_of(mm)) is not None}
+        changed = False
+        for r in self._admission_order(queue):
+            mid = r.model_id
+            if mid in self._quarantined or mid not in batches:
+                continue
+            rec = self._spills.get(r.rid)
+            if rec is not None and self._boundary < rec.not_before:
+                continue           # candidate itself is backing off
+            if self.deadline_gated and self._hopeless(r, rec):
+                continue           # not worth evicting anyone for
+            if cexec.free_slots(mid) > 0:
+                continue           # not slot-bound; admission had its shot
+            eligible = [v for v in cexec.evictable(mid)
+                        if (self._spills[v.rid].attempts
+                            if v.rid in self._spills else 0)
+                        < self.max_preemptions]
+            victim = pick_victim(eligible, r)
+            if victim is None:
+                continue
+            trial = [x for x in batches[mid] if x.rid != victim.rid] + [r]
+            trial_batches = dict(batches)
+            trial_batches[mid] = trial
+            if not self.policy.validate(
+                    self.env, Decision(batches=trial_batches,
+                                       quants=quants)):
+                continue
+            payload = cexec.preempt(mid, victim.rid)
+            prev = self._spills.get(victim.rid)
+            attempts = prev.attempts + 1 if prev is not None else 1
+            self._spills[victim.rid] = SpillRecord(
+                request=victim, payload=payload, attempts=attempts,
+                not_before=self._boundary
+                + self.backoff_boundaries * attempts)
+            requeued.append(victim)
+            trace.preempted_rids.append(victim.rid)
+            if counting:
+                m.preempted += 1
+            changed = True
+            if cexec.accepts(mid, r):
+                cexec.place(mid, r,
+                            resume=rec.payload if rec is not None
+                            else None)
+                admitted.append(r)
+                batches[mid] = trial
+            else:
+                batches[mid] = [x for x in batches[mid]
+                                if x.rid != victim.rid]
+        if changed:
+            self._assert_jointly_feasible(batches, quants)
+        return admitted, requeued
+
+    def _shed_queue(self, queue: List[Request], m: EpochMetrics,
+                    trace: EpochTrace, counting: bool) -> List[Request]:
+        """Degraded-mode load shedding: drop the controller's chosen
+        lowest-priority queued work with explicit accounting (``shed``
+        is a separate conservation bucket from viability drops)."""
+        to_shed = self.degradation.shed_candidates(queue)
+        if not to_shed:
+            return queue
+        gone = set()
+        for r in to_shed:
+            gone.add(r.rid)
+            trace.shed_rids.append(r.rid)
+            if counting:
+                m.shed += 1
+        return [r for r in queue if r.rid not in gone]
+
+    def _quarantine(self, mid: Optional[str], m: EpochMetrics,
+                    trace: EpochTrace, counting: bool) -> None:
+        """Quarantine pool ``mid`` after ``quarantine_after`` consecutive
+        step failures: evacuate everything it holds (shed, with
+        accounting — cross-model redistribution is impossible since a
+        request targets one hosted model), and stop admitting into it
+        for the rest of the run."""
+        removed = self.cexec.evacuate(mid)
+        self._quarantined.add(mid)
+        m.quarantined.append(str(mid))
+        for r in removed:
+            trace.shed_rids.append(r.rid)
+            if counting:
+                m.shed += 1
+            self._first_token.pop(r.rid, None)
+            self._spills.pop(r.rid, None)
+
+    def _step_guarded(self, m: EpochMetrics, trace: EpochTrace,
+                      counting: bool) -> Tuple[List, float, float]:
+        """One data-plane step under the fault-handling contract:
+        retry transient failures (raised BEFORE any state mutated, so a
+        replay is safe) up to ``retry_limit`` times, trip the watchdog
+        on steps exceeding ``watchdog_s`` wall seconds, and quarantine a
+        pool after ``quarantine_after`` CONSECUTIVE failures.  A
+        boundary whose retry budget is exhausted is skipped — no
+        progress, but the loop survives and the next boundary retries.
+        Returns ``(finished, occupancy, wall_s)``."""
+        wall_total = 0.0
+        for attempt in range(self.retry_limit + 1):
+            t0 = time.perf_counter()
+            try:
+                finished, occ = self.cexec.step(self.env, self.k)
+            except TransientStepError as e:
+                wall_total += time.perf_counter() - t0
+                trace.faults += 1
+                if counting:
+                    m.faults_injected += 1
+                key = e.mid
+                self._streaks[key] = self._streaks.get(key, 0) + 1
+                if key in self.cexec.pool_ids() \
+                        and key not in self._quarantined \
+                        and self._streaks[key] >= self.quarantine_after:
+                    self._quarantine(key, m, trace, counting)
+                    self._streaks[key] = 0
+                if attempt < self.retry_limit:
+                    if counting:
+                        m.retried += 1
+                    continue
+                return [], 0.0, wall_total
+            wall = time.perf_counter() - t0
+            wall_total += wall
+            if self.watchdog_s is not None and wall > self.watchdog_s \
+                    and counting:
+                m.watchdog_trips += 1
+            self._streaks.clear()   # a successful step ran every pool
+            return finished, occ, wall_total
+        return [], 0.0, wall_total  # unreachable; loop always returns
 
     def _record_blocks(self, counting: bool, m: EpochMetrics,
                        trace: EpochTrace) -> None:
@@ -814,7 +1202,8 @@ class ContinuousRuntime(EpochRuntime):
             m.kv_dead_tokens += max(0, alloc_tok - live_tok)
 
     def _record_finished(self, finished: Sequence, counting: bool,
-                         m: EpochMetrics, trace: EpochTrace) -> None:
+                         m: EpochMetrics, trace: EpochTrace,
+                         now: Optional[float] = None) -> None:
         for mid, r, tokens in finished:
             trace.finished_rids.append(r.rid)
             trace.generated_tokens += tokens
@@ -826,6 +1215,27 @@ class ContinuousRuntime(EpochRuntime):
                 name = self.cexec.method_name(mid, self._env_for(r))
                 m.served_by_method[name] = \
                     m.served_by_method.get(name, 0) + 1
+            if now is None:
+                continue
+            # SLO accounting in simulated time (DESIGN.md §2.4): the
+            # request completes at the END of the segment it finished
+            # in; its first token landed at the end of the segment that
+            # admitted it.
+            lat = now - r.arrival
+            met = lat <= r.tau + 1e-9
+            if counting:
+                m.latencies.append(lat)
+                if met:
+                    m.slo_met += 1
+                ft = self._first_token.get(r.rid)
+                if ft is not None:
+                    m.ttfts.append(ft - r.arrival)
+                    if tokens > 1 and now > ft:
+                        m.tpots.append((now - ft) / (tokens - 1))
+            if self.degradation is not None:
+                self.degradation.record_finish(met)
+            self._first_token.pop(r.rid, None)
+            self._spills.pop(r.rid, None)
 
     def run(self, rate: Optional[float] = None, n_epochs: int = 30,
             seed: int = 0, gen: Optional[RequestGenerator] = None,
@@ -841,6 +1251,14 @@ class ContinuousRuntime(EpochRuntime):
         m = EpochMetrics(n_epochs=n_epochs, T_E=T_E)
         queue: List[Request] = []
         trace: Optional[EpochTrace] = None
+        # per-run SLO / robustness state (DESIGN.md §2.4)
+        self._spills: Dict[int, SpillRecord] = {}
+        self._quarantined: set = set()
+        self._streaks: Dict[Optional[str], int] = {}
+        self._boundary = 0              # global segment-boundary index
+        self._first_token: Dict[int, float] = {}
+        self._tnow = 0.0                # current boundary's segment start
+        now = 0.0
 
         for e in range(n_epochs + warmup_epochs):
             counting = e >= warmup_epochs
@@ -848,6 +1266,8 @@ class ContinuousRuntime(EpochRuntime):
                                selected_rids=[], counted=counting)
             for j in range(n_seg):
                 t_seg = e * T_E + j * dt
+                self._tnow = t_seg
+                now = t_seg + dt
                 # requests that arrived during the previous SEGMENT join
                 # here — the epoch loop's boundary rule, at segment grain
                 arrivals = gen.within(t_seg - dt, t_seg) if (e or j) else []
@@ -862,7 +1282,26 @@ class ContinuousRuntime(EpochRuntime):
                 trace.dropped += n_dropped
                 if counting:
                     m.dropped += n_dropped
-                admitted = self._try_admit(queue, trace)
+
+                # graceful degradation: advance the hysteresis, and in
+                # degraded mode shed the controller's lowest-priority
+                # queued work before admission considers it
+                degraded = False
+                if self.degradation is not None:
+                    degraded = self.degradation.observe(len(queue))
+                    if degraded:
+                        if counting:
+                            m.degraded_segments += 1
+                        queue = self._shed_queue(queue, m, trace,
+                                                 counting)
+
+                admitted = self._try_admit(queue, trace, degraded)
+                if self.preemption:
+                    got = {r.rid for r in admitted}
+                    rest = [r for r in queue if r.rid not in got]
+                    preempt_admits, requeued = self._try_preempt(
+                        rest, trace, m, counting)
+                    admitted = admitted + preempt_admits
                 if admitted:
                     got = {r.rid for r in admitted}
                     queue = [r for r in queue if r.rid not in got]
@@ -871,31 +1310,41 @@ class ContinuousRuntime(EpochRuntime):
                         trace.admitted_mid_epoch += len(admitted)
                         if counting:
                             m.admitted_mid_epoch += len(admitted)
+                    for r in admitted:
+                        if r.rid in self._spills and counting:
+                            m.resumed += 1
+                        self._first_token.setdefault(r.rid, now)
+                if self.preemption and requeued:
+                    queue.extend(requeued)
 
-                t0 = time.perf_counter()
-                finished, occ = self.cexec.step(self.env, self.k)
-                trace.wall_s += time.perf_counter() - t0
+                finished, occ, wall = self._step_guarded(m, trace,
+                                                         counting)
+                self._boundary += 1
+                trace.wall_s += wall
                 trace.segments += 1
                 trace.occupancy.append(occ)
                 self._record_blocks(counting, m, trace)
                 if counting:
                     m.segments += 1
-                self._record_finished(finished, counting, m, trace)
+                self._record_finished(finished, counting, m, trace,
+                                      now=now)
 
             if counting:
                 m.batch_sizes.append(len(trace.selected_rids))
                 m.wall_s += trace.wall_s
             m.traces.append(trace)
 
-        # drain resident cohorts (bounded: every step makes progress and
-        # nothing new is admitted), attributed to the final epoch
+        # drain resident cohorts (bounded: every healthy step makes
+        # progress and nothing new is admitted), attributed to the final
+        # epoch; simulated time keeps advancing on the segment grid so
+        # drain-finishing requests get honest latencies
         counting = n_epochs > 0
-        for _ in range(100_000):
+        for _ in range(self.drain_limit):
             if self.cexec.idle():
                 break
-            t0 = time.perf_counter()
-            finished, occ = self.cexec.step(self.env, self.k)
-            wall = time.perf_counter() - t0
+            finished, occ, wall = self._step_guarded(m, trace, counting)
+            self._boundary += 1
+            now += dt
             trace.wall_s += wall
             trace.segments += 1
             trace.occupancy.append(occ)
@@ -903,9 +1352,20 @@ class ContinuousRuntime(EpochRuntime):
             if counting:
                 m.segments += 1
                 m.wall_s += wall
-            self._record_finished(finished, counting, m, trace)
+            self._record_finished(finished, counting, m, trace, now=now)
         else:
-            raise RuntimeError("continuous drain did not converge")
+            # a stalled drain still hands back everything it knows: the
+            # partial metrics (with the rows still resident named in
+            # ``in_flight_rids``) ride on the typed error, keeping the
+            # conservation equation checkable from the exception alone
+            m.final_queue_rids = [r.rid for r in queue]
+            m.in_flight_rids = [r.rid for mid in self.cexec.pool_ids()
+                                for r in self.cexec.resident(mid)]
+            raise DrainStallError(
+                f"continuous drain did not converge within "
+                f"{self.drain_limit} segments "
+                f"({len(m.in_flight_rids)} rows in flight)",
+                metrics=m, resident_rids=m.in_flight_rids)
 
         m.final_queue_rids = [r.rid for r in queue]
         return m

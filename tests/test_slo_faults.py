@@ -1,0 +1,330 @@
+"""Overload-hardened serving (§2.4): fault injection, conservation,
+quarantine, graceful degradation, the typed drain stall, and the SLO
+queue machinery.
+
+The extended conservation equation is the backbone invariant here::
+
+    arrived == served + dropped + shed + queued + in_flight
+
+and it must hold under EVERY seeded :class:`FaultPlan` — the hypothesis
+sweep drives both runtimes, every registered policy spec, and random
+transient-fault schedules through it.  The other bit-level contract:
+injection never perturbs the data plane, so a transient-only plan
+leaves every served row's tokens identical to the fault-free run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.environment import paper_env
+from repro.core.multi import MultiLLMEnv
+from repro.core.policy import DrainStallError, available
+from repro.core.request import BurstyGenerator, Request, RequestGenerator
+from repro.serving.faults import FaultPlan, FaultyExecutor
+from repro.serving.runtime import (AnalyticContinuousExecutor,
+                                   AnalyticExecutor, ContinuousRuntime,
+                                   EpochRuntime, still_viable)
+from repro.serving.slo import (DegradationController, edf_order,
+                               pick_victim)
+
+ENV = paper_env("bloom-3b", "W8A16")
+MENV = MultiLLMEnv.host({
+    "bloom-3b": paper_env("bloom-3b", "W8A16"),
+    "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+})
+
+
+def _tagger(arrivals):
+    for i, r in enumerate(arrivals):
+        r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+    return arrivals
+
+
+def _spec_env(spec):
+    multi = spec.startswith("multi-dftsp")
+    return (MENV if multi else ENV), (_tagger if multi else None)
+
+
+def conserved(m):
+    assert m.arrived == m.served + m.dropped + m.shed \
+        + len(m.final_queue_rids) + len(m.in_flight_rids), \
+        (m.arrived, m.served, m.dropped, m.shed,
+         len(m.final_queue_rids), len(m.in_flight_rids))
+
+
+def _req(rid=0, s=64, n=64, tau=2.0, arrival=0.0, priority=0, a=0.5):
+    return Request(rid=rid, s=s, n=n, tau=tau, a=a, h=1e-3,
+                   arrival=arrival, priority=priority)
+
+
+# -- deterministic fault-plan conservation (runs without hypothesis) ---------
+
+
+@pytest.mark.parametrize("runtime", ["epoch", "continuous"])
+def test_conservation_under_transient_faults(runtime):
+    plan = FaultPlan(seed=3, p_transient=0.25)
+    if runtime == "epoch":
+        rt = EpochRuntime(ENV, "dftsp",
+                          FaultyExecutor(AnalyticExecutor(), plan))
+    else:
+        rt = ContinuousRuntime(
+            ENV, "dftsp",
+            FaultyExecutor(AnalyticContinuousExecutor(capacity=4), plan),
+            k=64)
+    m = rt.run(rate=6, n_epochs=5, seed=7, warmup_epochs=0)
+    conserved(m)
+    assert m.faults_injected > 0
+    assert m.retried > 0
+
+
+def test_faulty_executor_injection_is_seeded():
+    runs = []
+    for _ in range(2):
+        fx = FaultyExecutor(AnalyticContinuousExecutor(capacity=4),
+                            FaultPlan(seed=9, p_transient=0.3))
+        m = ContinuousRuntime(ENV, "dftsp", fx, k=64).run(
+            rate=6, n_epochs=4, seed=1, warmup_epochs=0)
+        runs.append((m.faults_injected, m.served, m.dropped,
+                     tuple(t.faults for t in m.traces)))
+    assert runs[0] == runs[1]
+
+
+def test_quarantine_after_consecutive_failures():
+    """A pool failing every step (retry budget exhausted each boundary)
+    is quarantined: evacuated with shed accounting, never re-admitted,
+    and the run still terminates with conservation intact."""
+    fx = FaultyExecutor(AnalyticContinuousExecutor(capacity=4),
+                        FaultPlan(seed=0, p_transient=1.0))
+    rt = ContinuousRuntime(ENV, "dftsp", fx, k=64, retry_limit=0,
+                           quarantine_after=3)
+    m = rt.run(rate=6, n_epochs=4, seed=7, warmup_epochs=0)
+    conserved(m)
+    assert m.quarantined == ["None"]      # the single-model pool's key
+    assert m.served == 0                  # every step faulted
+
+
+def test_max_transient_caps_injection():
+    fx = FaultyExecutor(AnalyticContinuousExecutor(capacity=4),
+                        FaultPlan(seed=2, p_transient=1.0,
+                                  max_transient=5))
+    m = ContinuousRuntime(ENV, "dftsp", fx, k=64,
+                          quarantine_after=100).run(
+        rate=6, n_epochs=4, seed=7, warmup_epochs=0)
+    conserved(m)
+    assert m.faults_injected == 5
+    assert m.quarantined == []            # streak never reaches the bar
+    assert m.served > 0                   # the plan runs dry, service resumes
+
+
+def test_arena_squeeze_defers_admission_without_crashing():
+    """An arena_holds window shrinks the free list mid-run; per-block
+    admission control must defer, not crash, and hand the pages back."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.kv_arena import KVArena
+    from repro.serving.runtime import EngineContinuousExecutor
+    eng = ServingEngine(reduced_cfg("bloom-3b"), batch_capacity=3,
+                        s_max=16, n_max=8)
+    arena = KVArena.for_engines([eng], block_tokens=8)
+    fx = FaultyExecutor(
+        EngineContinuousExecutor(eng, seed=0, arena=arena),
+        FaultPlan(seed=0, arena_holds=((2, 6, arena.n_pages),)))
+    m = ContinuousRuntime(ENV, "dftsp", fx, k=2).run(
+        gen=RequestGenerator(rate=6, seed=0, lengths=(4, 8)),
+        n_epochs=3, warmup_epochs=0)
+    conserved(m)
+    assert m.served > 0
+    assert not fx._held                   # every hold window closed
+
+
+def test_transient_faults_leave_served_tokens_bit_identical():
+    """The injection contract end-to-end on the real engine: a
+    transient-only plan (faults raised BEFORE the step mutates state,
+    absorbed by in-boundary retries) must leave every served row's
+    collected tokens bit-identical to the fault-free run."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.runtime import EngineContinuousExecutor
+    eng = ServingEngine(reduced_cfg("bloom-3b"), batch_capacity=3,
+                        s_max=16, n_max=8)
+    outs = []
+    for plan in (None, FaultPlan(seed=5, p_transient=0.2,
+                                 max_transient=30)):
+        cexec = EngineContinuousExecutor(eng, seed=0, collect_tokens=True)
+        ex = cexec if plan is None else FaultyExecutor(cexec, plan)
+        m = ContinuousRuntime(ENV, "dftsp", ex, k=2).run(
+            gen=RequestGenerator(rate=6, seed=0, lengths=(4, 8)),
+            n_epochs=3, warmup_epochs=0)
+        conserved(m)
+        if plan is not None:
+            assert m.faults_injected > 0
+        outs.append(dict(cexec.outputs))
+    assert sorted(outs[0]) == sorted(outs[1])
+    for rid in outs[0]:
+        assert np.array_equal(outs[0][rid], outs[1][rid]), rid
+
+
+# -- DrainStallError: the typed stall contract -------------------------------
+
+
+class StuckExecutor(AnalyticContinuousExecutor):
+    """Residents never finish: the drain can only stall."""
+
+    def step(self, env, k):
+        return [], 1.0
+
+
+def test_drain_stall_raises_typed_error_with_partial_metrics():
+    rt = ContinuousRuntime(ENV, "dftsp", StuckExecutor(capacity=4),
+                           k=64, drain_limit=10)
+    with pytest.raises(DrainStallError) as ei:
+        rt.run(rate=6, n_epochs=2, seed=0, warmup_epochs=0)
+    e = ei.value
+    assert isinstance(e, RuntimeError)     # callers catching the old
+                                           # bare RuntimeError still work
+    m = e.metrics
+    assert m is not None
+    assert e.resident_rids == m.in_flight_rids and m.in_flight_rids
+    conserved(m)                           # partial metrics stay coherent
+    assert m.served == 0 and m.arrived > 0
+
+
+# -- SLO queue machinery: EDF order, victims, degradation hysteresis ---------
+
+
+def test_edf_order_is_priority_major_deadline_minor():
+    q = [_req(rid=0, tau=5.0, priority=0),
+         _req(rid=1, tau=1.0, priority=0),
+         _req(rid=2, tau=9.0, priority=2),
+         _req(rid=3, tau=0.5, priority=1)]
+    assert [r.rid for r in edf_order(q)] == [2, 3, 1, 0]
+
+
+def test_pick_victim_only_trades_looser_for_tighter():
+    res = [_req(rid=0, tau=1.0, priority=1), _req(rid=1, tau=4.0,
+                                                  priority=1)]
+    # same class, earlier deadline: evicts the LATEST-deadline resident
+    v = pick_victim(res, _req(rid=2, tau=2.0, priority=1))
+    assert v.rid == 1
+    # equal requests never evict each other (no livelock)
+    assert pick_victim(res, _req(rid=3, tau=4.0, priority=1)) is None
+    # higher class beats regardless of deadline; lowest class goes first
+    res = [_req(rid=0, tau=1.0, priority=0), _req(rid=1, tau=0.2,
+                                                  priority=1)]
+    assert pick_victim(res, _req(rid=4, tau=9.0, priority=2)).rid == 0
+
+
+def test_degradation_hysteresis_needs_patience_both_ways():
+    c = DegradationController(queue_high=10, queue_low=2, patience=2)
+    assert not c.observe(50)              # one pressured boundary: no flip
+    assert c.observe(50)                  # second: degraded
+    assert c.observe(0)                   # one relaxed boundary: still on
+    assert not c.observe(0)               # second: recovered
+
+
+def test_degradation_sheds_only_below_priority_floor():
+    c = DegradationController(shed_below_priority=1, degraded=True)
+    q = [_req(rid=0, priority=0), _req(rid=1, priority=1),
+         _req(rid=2, priority=2)]
+    assert [r.rid for r in c.shed_candidates(q)] == [0]
+    c.degraded = False
+    assert c.shed_candidates(q) == []
+
+
+# -- BurstyGenerator: freeze-and-replay determinism --------------------------
+
+
+def test_bursty_generator_is_frozen_and_deterministic():
+    kw = dict(base_rate=8.0, horizon=10.0, seed=4, period=5.0, depth=0.5,
+              bursts=((2.0, 3.0, 2.0),), priorities=(0, 1, 2))
+    a, b = BurstyGenerator(**kw), BurstyGenerator(**kw)
+    assert len(a.requests) > 0
+    for ra, rb in zip(a.requests, b.requests):
+        assert (ra.rid, ra.s, ra.n, ra.tau, ra.a, ra.h, ra.arrival,
+                ra.priority) == (rb.rid, rb.s, rb.n, rb.tau, rb.a, rb.h,
+                                 rb.arrival, rb.priority)
+    # within() replays COPIES of the frozen stream: any slicing grid
+    # reassembles the identical stream, and mutating a slice (the
+    # runtimes age t_w in place) never corrupts the master copy
+    fine = [r for t in np.arange(0.0, 10.0, 0.5)
+            for r in a.within(float(t), float(t) + 0.5)]
+    assert [r.rid for r in fine] == [r.rid for r in a.requests]
+    fine[0].t_w = 99.0
+    assert a.requests[0].t_w != 99.0
+
+
+# -- hypothesis properties (CI installs hypothesis; local runs skip) ---------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(spec=st.sampled_from(available()),
+           runtime=st.sampled_from(["epoch", "continuous"]),
+           fault_seed=st.integers(0, 2**16),
+           p=st.floats(0.0, 0.5),
+           preemption=st.booleans())
+    def test_conservation_under_fault_plans_property(spec, runtime,
+                                                     fault_seed, p,
+                                                     preemption):
+        env, tagger = _spec_env(spec)
+        plan = FaultPlan(seed=fault_seed, p_transient=p)
+        if runtime == "epoch":
+            rt = EpochRuntime(env, spec,
+                              FaultyExecutor(AnalyticExecutor(), plan))
+        else:
+            rt = ContinuousRuntime(
+                env, spec,
+                FaultyExecutor(AnalyticContinuousExecutor(capacity=4),
+                               plan),
+                k=64, preemption=preemption,
+                degradation=DegradationController(
+                    queue_high=8, queue_low=2, shed_below_priority=1))
+        m = rt.run(gen=RequestGenerator(rate=4, seed=11,
+                                        priorities=(0, 1, 2)),
+                   n_epochs=4, warmup_epochs=0, tag_arrivals=tagger)
+        conserved(m)
+        rids = [rid for t in m.traces
+                for rid in (t.finished_rids if any(tt.segments
+                                                   for tt in m.traces)
+                            else t.selected_rids)]
+        assert len(rids) == len(set(rids))
+
+    @settings(max_examples=50, deadline=None)
+    @given(s=st.integers(1, 2048), n=st.integers(1, 2048),
+           tau=st.floats(0.01, 50.0), arrival=st.floats(0.0, 50.0),
+           t1=st.floats(0.0, 100.0), dt=st.floats(0.0, 100.0))
+    def test_still_viable_is_monotone_in_now(s, n, tau, arrival, t1, dt):
+        """Aging can only hurt: once a queued request stops being
+        viable it never becomes viable again, so _age_and_drop's
+        drop decision is stable under any boundary grid."""
+        r = _req(s=s, n=n, tau=tau, arrival=arrival)
+        if still_viable(ENV, r, t1 + dt):
+            assert still_viable(ENV, r, t1)
+
+    @settings(max_examples=50, deadline=None)
+    @given(s=st.integers(1, 2048), n=st.integers(1, 2048),
+           tau=st.floats(0.01, 50.0), slack=st.floats(0.0, 10.0))
+    def test_age_and_drop_keeps_lone_compute_viable_requests(s, n, tau,
+                                                             slack):
+        """A request whose lone-compute bound (comm + solo prefill +
+        solo decode) still meets its deadline is NEVER dropped —
+        the drop heuristic is an optimistic lower bound by contract."""
+        rt = ContinuousRuntime(ENV, "dftsp",
+                               AnalyticContinuousExecutor(capacity=4),
+                               k=64)
+        now = float(slack)
+        r = _req(s=s, n=n, tau=tau, arrival=0.0)
+        kept, dropped = rt._age_and_drop([r], now)
+        cm = ENV.cost_model()
+        lone = ENV.quant.beta * (cm.prefill_flops(r.s, 1)
+                                 + cm.decode_flops(r.s, [r.n])) / ENV.C
+        meets = now + ENV.T_U + lone + ENV.T_D <= r.tau
+        if meets:
+            assert kept == [r] and dropped == 0
