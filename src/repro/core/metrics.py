@@ -120,6 +120,9 @@ class EpochMetrics:
                                   # accounting)
     kv_dead_tokens: int = 0       # Σ per-segment allocated-but-dead KV
                                   # tokens (junk gaps + reserved tail)
+    kv_topup_pages: int = 0       # pages leased via segment-boundary
+                                  # lease top-ups (cap-aware incremental
+                                  # leasing, DESIGN.md §2.3) this run
     # -- SLO accounting (DESIGN.md §2.4) ------------------------------------
     shed: int = 0                 # load-shed under pressure/quarantine
                                   # (distinct from viability drops)

@@ -133,6 +133,16 @@ class PagedDecodeState:
     forced: jax.Array = None    # (B, n_max) forced-replay tokens (see
                                 # DecodeState.forced)
     n_forced: jax.Array = None  # (B,) forced-prefix length per row
+    # cap-aware incremental leasing (DESIGN.md §2.3): per row, one past
+    # the highest block currently leased and one past the last block its
+    # cap ``t0 + n`` can ever need.  Blocks in [lease_end, lease_last)
+    # are TRASH in the table until a segment-boundary top-up
+    # (``_extend_leases``) leases them — never mid-segment.
+    lease_end: np.ndarray = None   # (B,) next block index to lease
+    lease_last: np.ndarray = None  # (B,) one past last block of the cap
+    t_host: int = 0             # host upper bound on ``t`` (a segment may
+                                # exit early; the bound only ever
+                                # OVER-covers, inside the reservation)
 
     @property
     def batch_capacity(self) -> int:
@@ -198,6 +208,8 @@ class ServingEngine:
             donate_argnums=(0, 1) if donate else ())
         self._refill_rows = jax.jit(self._refill_rows_fn)
         self._cache_axes = None              # per-leaf batch axis (lazy)
+        self.lease_topups = 0                # pages leased via segment-
+                                             # boundary top-up (metrics)
 
     # -- multi-precision weight cache ---------------------------------------
 
@@ -583,22 +595,92 @@ class ServingEngine:
         return self.model.decode_step_paged is not None \
             and not self.cfg.sliding_window and not self.cfg.is_moe
 
-    def pages_for_admission(self, t: int, block_tokens: int) -> int:
-        """Worst-case pages one row admitted at cohort step ``t`` needs.
+    def pages_for_admission(self, t: int, n: int,
+                            block_tokens: int) -> int:
+        """Pages one row admitted at cohort step ``t`` with output cap
+        ``n`` will lease over its whole life — CAP-AWARE, not worst-case.
 
-        Cohort-shared write position: every resident row writes every
-        step until the cohort ends at ``n_max``, so the reservation must
-        cover the prompt blocks plus every block from the row's first
-        write block through the end of the cache — only the fully-dead
-        junk-gap blocks ``[ceil(s_max/bt), (s_max+t)//bt)`` (mapped to
-        the shared zero page) cost nothing.  ``accepts`` gates admission
-        on this so a leased row never needs a mid-segment allocation."""
+        The row's writes land at the cohort-shared position ``s_max + τ``
+        for ``τ in [t, min(t + n, n_max))``, so it needs exactly its
+        prompt-prefix blocks plus the blocks covering that write span:
+        the fully-dead junk-gap blocks ``[ceil(s_max/bt), (s_max+t)//bt)``
+        map to the shared zero page and cost nothing, and blocks past the
+        cap's last write block are NEVER leased — any overflow write
+        (a finished row keeps stepping until released) routes to
+        ``TRASH_PAGE`` through the block table.  Admission (``accepts``)
+        reserves this count; ``start/refill_chunked`` lease the prompt
+        prefix + first write block up front and ``_extend_leases`` tops
+        the rest up at segment boundaries, so the reservation equals the
+        pages subsequently leased (tests pin the identity) and a row
+        never writes an unleased block WITHIN a segment."""
         nb = self.cache_len // block_tokens
-        if t <= 0:
-            return nb
+        t = max(0, int(t))
+        end = min(t + int(n), self.n_max)
+        if end <= t:
+            return 0            # no headroom / cap 0: nothing to lease
         npb = -(-self.s_max // block_tokens)
         b_w = min((self.s_max + t) // block_tokens, nb - 1)
-        return nb - max(0, b_w - npb)
+        b_last = (self.s_max + end - 1) // block_tokens
+        return npb + max(0, b_last + 1 - max(npb, b_w))
+
+    def _lease_row(self, arena: KVArena, t: int, cap: int):
+        """Initial cap-aware lease plan for one row admitted at cohort
+        step ``t`` with output cap ``cap``: the blocks to lease NOW
+        (prompt prefix + the first write block, which must be scattered
+        from the prefill cache so the gap-tail positions inside it read
+        as the slab's zeros), the table row mapping (ZERO for the
+        fully-dead junk gap, TRASH beyond the lease span), and the
+        ``(lease_end, lease_last)`` bookkeeping the segment-boundary
+        top-up advances."""
+        bt = arena.block_tokens
+        nb = self.cache_len // bt
+        npb = -(-self.s_max // bt)
+        b_w = min((self.s_max + int(t)) // bt, nb - 1)
+        row = np.full((nb,), TRASH_PAGE, np.int32)
+        row[npb:b_w] = ZERO_PAGE        # junk gap [s_max, s_max + t)
+        blocks = list(range(npb))
+        if b_w >= npb:
+            blocks.append(b_w)
+        lease_end = b_w + 1 if b_w >= npb else npb
+        end = min(int(t) + int(cap), self.n_max)
+        b_last = (self.s_max + end - 1) // bt if end > int(t) else 0
+        lease_last = max(lease_end, b_last + 1)
+        return blocks, row, lease_end, lease_last
+
+    def _extend_leases(self, state: PagedDecodeState, k: int) -> None:
+        """Segment-boundary lease top-up (DESIGN.md §2.3): before a
+        segment of at most ``k`` steps launches, every row's lease must
+        cover the blocks the segment can write — a block is read
+        UNMASKED once the cursor passes it, so it must be leased before
+        the cursor enters it, never after.  Host-side ``BlockTable``
+        remap + ONE device re-ship (the lazy mirror), never a
+        mid-segment allocation.  ``t_host`` is a host-side upper bound
+        on the cohort step (segments may exit early), so the cover can
+        only OVERSHOOT — bounded by ``lease_last``, i.e. inside the
+        admission-time reservation the runtime charged."""
+        arena = state.arena
+        bt = arena.block_tokens
+        nb = self.cache_len // bt
+        cover = min(state.t_host + int(k), self.n_max)
+        need_end = min((self.s_max + cover - 1) // bt + 1, nb)
+        for b in range(state.lease_end.shape[0]):
+            tgt = min(need_end, int(state.lease_last[b]))
+            le = int(state.lease_end[b])
+            if tgt > le:
+                state.table.extend_row(b, le, arena.alloc(tgt - le))
+                state.lease_end[b] = tgt
+                self.lease_topups += tgt - le
+        state.t_host = cover
+
+    def lease_commitment(self, state: Optional[PagedDecodeState]) -> int:
+        """Pages a live cohort is still ENTITLED to lease via future
+        top-ups (Σ ``lease_last - lease_end``).  Admission must keep
+        this many pages un-promised on top of the free list, so a
+        boundary's top-ups can never hit :class:`ArenaExhausted`."""
+        if state is None or state.lease_end is None:
+            return 0
+        return int(np.maximum(0, state.lease_last.astype(np.int64)
+                              - state.lease_end).sum())
 
     def _forced_buffers(self, prefixes, slots=None):
         """Host (B, n_max) forced-replay token buffer + (B,) lengths from
@@ -651,13 +733,21 @@ class ServingEngine:
         bt = arena.block_tokens
         assert self.cache_len % bt == 0, (self.cache_len, bt)
         nb = self.cache_len // bt
-        table = BlockTable(B, nb)
+        table = BlockTable(B, nb, n_pages=arena.n_pages)
         ids = np.full((B * nb,), TRASH_PAGE, np.int32)
+        lease_end = np.zeros((B,), np.int32)
+        lease_last = np.zeros((B,), np.int32)
         for b in range(B):
             if caps[b] > 0:
-                leases = arena.alloc(nb)
-                table.set_row(b, leases)
-                ids[b * nb:(b + 1) * nb] = leases
+                # cap-aware lease: prompt blocks + first write block now
+                # (blocks past it stay TRASH until a segment-boundary
+                # top-up), instead of the historical full-span alloc(nb)
+                blocks, row, le, ll = self._lease_row(arena, 0, caps[b])
+                leases = arena.alloc(len(blocks))
+                row[blocks] = leases
+                table.set_row(b, row)
+                ids[b * nb + np.asarray(blocks)] = leases
+                lease_end[b], lease_last[b] = le, ll
         pages = self._page_scatter(arena.buffers(), cache,
                                    jax.device_put(ids))
         arena.set_buffers(pages)
@@ -667,7 +757,8 @@ class ServingEngine:
             lengths=jnp.zeros((B,), jnp.int32),
             done=jnp.zeros((B,), bool),
             caps=caps_j, t=jnp.int32(0), bits=bits, caps_host=caps,
-            forced=forced, n_forced=nf)
+            forced=forced, n_forced=nf,
+            lease_end=lease_end, lease_last=lease_last, t_host=0)
 
     def generate_chunked(self, state, k: int):
         """Advance a cohort by AT MOST ``k`` decode steps (one jitted
@@ -682,6 +773,10 @@ class ServingEngine:
         params = self.params_for(state.bits)
         t_end = jnp.minimum(state.t + jnp.int32(k), jnp.int32(self.n_max))
         if isinstance(state, PagedDecodeState):
+            # boundary top-up: lease every block this segment can write
+            # BEFORE launching it (one host-side remap + one table
+            # re-ship; the jitted segment never allocates)
+            self._extend_leases(state, k)
             pages, cur, out, lengths, done, t = self._decode_chunk_paged(
                 params, state.arena.buffers(), state.table.device,
                 state.cur, state.out, state.lengths, state.done,
@@ -702,10 +797,16 @@ class ServingEngine:
         their table rows to the trash page (their continued writes — dead
         rows keep stepping, exactly like the slab path — become
         don't-care scatters no live row reads).  Freed pages are
-        allocatable by ANY cohort at the very next admission boundary."""
+        allocatable by ANY cohort at the very next admission boundary,
+        and the row's remaining lease entitlement is CANCELLED — the
+        un-leased tail of its reservation returns to the node's
+        admission budget (``lease_commitment``) the same moment."""
         for slot in slots:
             state.arena.free(state.table.row_leases(slot))
             state.table.clear_row(slot)
+            if state.lease_end is not None:
+                state.lease_end[slot] = 0
+                state.lease_last[slot] = 0
         return state
 
     def release_all(self, state: PagedDecodeState) -> PagedDecodeState:
@@ -762,6 +863,9 @@ class ServingEngine:
             for slot in slots:
                 state.arena.free(state.table.row_leases(slot))
                 state.table.clear_row(slot)
+                if state.lease_end is not None:
+                    state.lease_end[slot] = 0     # cancel the remaining
+                    state.lease_last[slot] = 0    # lease entitlement too
         return dataclasses.replace(state, done=done, caps=caps,
                                    caps_host=caps_host)
 
@@ -788,10 +892,12 @@ class ServingEngine:
         position hold zero K/V — junk attention positions of the same
         class as the engine's padded prompts (the paper's s' padding);
         recurrent-state families have no such gap.  For a
-        :class:`PagedDecodeState` the splice is block-wise: fresh pages
-        are leased for the prompt blocks and the not-yet-written tail,
-        while the fully-dead junk-gap blocks map to the shared zero page
-        and cost no physical memory (DESIGN.md §2.3).
+        :class:`PagedDecodeState` the splice is block-wise and
+        CAP-AWARE: fresh pages are leased for the prompt blocks plus the
+        first write block only, the fully-dead junk-gap blocks map to
+        the shared zero page (no physical memory), and the rest of the
+        row's ``t + n`` span stays TRASH until the segment-boundary
+        top-up leases it (DESIGN.md §2.3).
         """
         B = self.batch_capacity
         params = self.params_for(state.bits)
@@ -828,17 +934,22 @@ class ServingEngine:
             arena = state.arena
             bt = arena.block_tokens
             nb = self.cache_len // bt
-            npb = -(-self.s_max // bt)
-            b_w = min((self.s_max + int(t_now)) // bt, nb - 1)
             ids = np.full((B * nb,), TRASH_PAGE, np.int32)
             for slot in slots:
                 arena.free(state.table.row_leases(slot))  # stale leases
-                blocks = list(range(npb)) + list(range(max(npb, b_w), nb))
+                # cap-aware lease: prompt blocks + the first write block
+                # (scattered so its gap-tail positions read as the
+                # slab's zeros); the junk gap maps to ZERO, everything
+                # past the first write block stays TRASH until the
+                # segment-boundary top-up reaches it
+                blocks, row, le, ll = self._lease_row(
+                    arena, t_now, new_caps[slot])
                 leases = arena.alloc(len(blocks))
-                row = np.full((nb,), ZERO_PAGE, np.int32)
                 row[blocks] = leases
                 state.table.set_row(slot, row)
                 ids[slot * nb + np.asarray(blocks)] = leases
+                state.lease_end[slot] = le
+                state.lease_last[slot] = ll
             pages = self._page_scatter(arena.buffers(), new_cache,
                                        jax.device_put(ids))
             arena.set_buffers(pages)
@@ -848,7 +959,8 @@ class ServingEngine:
             return dataclasses.replace(state, cur=cur, out=out,
                                        lengths=lengths, done=done,
                                        caps=caps, caps_host=caps_host,
-                                       forced=forced, n_forced=n_forced)
+                                       forced=forced, n_forced=n_forced,
+                                       t_host=int(t_now))
         cache, cur, out, lengths, done, caps = self._refill_merge(
             state.cache, new_cache, state.cur, new_cur, state.out,
             state.lengths, state.done, state.caps, caps_j, refill_j)

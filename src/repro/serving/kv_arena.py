@@ -24,10 +24,14 @@ Two pages are RESERVED and never allocated:
   block ``(s_max + t) // block_tokens`` is always a real page, so the
   zero page stays zero.
 * ``TRASH_PAGE`` — scratch for rows with no lease (empty slots, and
-  completed rows after release).  Dead rows keep stepping through the
-  model (exactly like the slab path), so their writes need somewhere to
-  land; duplicate-index scatters here are don't-care garbage that no
-  live row ever reads.
+  completed rows after release) AND for every block beyond a row's
+  cap-aware lease span.  Dead rows keep stepping through the model
+  (exactly like the slab path), so their writes need somewhere to land,
+  and a live row that exhausts its cap mid-segment overflows here too;
+  duplicate-index scatters into this page are don't-care garbage that
+  no live row ever reads — blocks a row will actually need are leased
+  (segment-boundary top-up, ``BlockTable.extend_row``) BEFORE the write
+  cursor enters them.
 
 Sizing: ``for_engines`` provisions ``shrink`` × the summed slab page
 count of the attached engines (+ the reserved pair).  ``shrink < 1`` is
@@ -48,7 +52,14 @@ TRASH_PAGE = 1
 N_RESERVED = 2
 
 
-class ArenaExhausted(RuntimeError):
+class ArenaError(RuntimeError):
+    """Allocator misuse: double-free, freeing a reserved page, or a page
+    id outside the pool.  A REAL exception (not an assert) so the guards
+    survive ``python -O`` — CI smokes the arena suite under ``-O`` to
+    keep it that way."""
+
+
+class ArenaExhausted(ArenaError):
     """alloc() asked for more pages than the free list holds — admission
     control must gate on ``free_pages`` so this never fires in the
     runtime (it firing in a test means the gate is broken)."""
@@ -58,10 +69,15 @@ class BlockTable:
     """Logical-block → physical-page map for one cohort (B rows × n_b
     logical blocks).  Host array is authoritative; ``device`` is the
     int32 mirror the jitted decode segment reads (re-shipped only when
-    rows change — admission/release boundaries, never mid-segment)."""
+    rows change — admission/release/top-up boundaries, never
+    mid-segment).  ``n_pages`` (when given) bounds every page id written
+    through ``set_row``/``extend_row`` — an id the device buffers don't
+    have must fail loudly at the table, not as silent garbage gathers."""
 
-    def __init__(self, batch: int, n_blocks: int):
+    def __init__(self, batch: int, n_blocks: int,
+                 n_pages: Optional[int] = None):
         self.host = np.full((batch, n_blocks), TRASH_PAGE, np.int32)
+        self.n_pages = n_pages
         self._device: Optional[jax.Array] = None
 
     @property
@@ -70,11 +86,34 @@ class BlockTable:
             self._device = jax.device_put(self.host)
         return self._device
 
+    def _check(self, pages: np.ndarray) -> None:
+        if pages.size and (pages.min() < 0 or (self.n_pages is not None
+                                               and pages.max()
+                                               >= self.n_pages)):
+            raise ArenaError(
+                f"page id out of range [0, {self.n_pages}): "
+                f"{sorted(set(pages.tolist()))}")
+
     def set_row(self, slot: int, pages: Sequence[int]) -> None:
-        self.host[slot] = np.asarray(pages, np.int32)
+        pages = np.asarray(pages, np.int32)
+        self._check(pages)
+        self.host[slot] = pages
+        self._device = None
+
+    def extend_row(self, slot: int, start: int,
+                   pages: Sequence[int]) -> None:
+        """Map blocks ``[start, start + len(pages))`` of a LIVE row to
+        freshly leased pages — the incremental lease top-up (DESIGN.md
+        §2.3).  Host-side remap only; the device mirror re-ships lazily,
+        so any number of same-boundary extends cost ONE transfer."""
+        pages = np.asarray(pages, np.int32)
+        self._check(pages)
+        self.host[slot, start:start + len(pages)] = pages
         self._device = None
 
     def clear_row(self, slot: int) -> None:
+        """Remap a row entirely to the trash page (dead rows keep
+        stepping; their writes become don't-care scatters)."""
         self.host[slot] = TRASH_PAGE
         self._device = None
 
@@ -98,7 +137,11 @@ class KVArena:
             name: jnp.zeros((spec.shape[0], n_pages, block_tokens)
                             + tuple(spec.shape[3:]), spec.dtype)
             for name, spec in leaf_specs.items()}
+        # LIFO list (pop order: hot pages stay hot) + membership set, so
+        # the double-free guard is O(1) and a REAL check — not an O(n)
+        # scan hidden inside an assert that ``python -O`` strips
         self._free: List[int] = list(range(n_pages - 1, N_RESERVED - 1, -1))
+        self._free_set = set(self._free)
         self.alloc_peak = 0
 
     # -- construction --------------------------------------------------------
@@ -176,15 +219,28 @@ class KVArena:
                 f"need {n} pages, {len(self._free)} free of "
                 f"{self.total_pages}")
         pages = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(pages)
         self.alloc_peak = max(self.alloc_peak, self.pages_in_use)
         return pages
 
     def free(self, pages: Sequence[int]) -> None:
+        """Return leased pages.  Raises :class:`ArenaError` on a
+        double-free, a reserved page, or an id outside the pool —
+        real exceptions, because an allocator whose guards vanish under
+        ``python -O`` silently grows the free list and later leases
+        pages the device buffers don't have."""
         for p in pages:
             p = int(p)
-            assert p >= N_RESERVED, f"freeing reserved page {p}"
-            assert p not in self._free, f"double free of page {p}"
+            if p < N_RESERVED:
+                raise ArenaError(f"freeing reserved page {p}")
+            if p >= self.n_pages:
+                raise ArenaError(
+                    f"freeing out-of-range page {p} (pool has "
+                    f"{self.n_pages} pages)")
+            if p in self._free_set:
+                raise ArenaError(f"double free of page {p}")
             self._free.append(p)
+            self._free_set.add(p)
 
     # -- device buffers ------------------------------------------------------
 

@@ -426,6 +426,13 @@ class ContinuousExecutor:
         capacity = sum(p["capacity"] for p in self._pools.values())
         return occupied, capacity, 0, 0
 
+    def topup_pages(self) -> int:
+        """Cumulative pages leased via segment-boundary top-ups
+        (DESIGN.md §2.3) — 0 for data planes without incremental
+        leasing.  The runtime records the per-run delta as
+        ``EpochMetrics.kv_topup_pages``."""
+        return 0
+
     # -- per-cohort quantization lifecycle -----------------------------------
 
     def set_quant(self, mid: Optional[str],
@@ -548,7 +555,8 @@ class EngineContinuousExecutor(ContinuousExecutor):
     node's shared segment grid.  Refill caps are clamped to the target
     cohort's OWN remaining headroom (``node_headroom``); cross-cohort
     memory pressure is expressed through the paged KV ``arena`` when one
-    is attached — each admission must reserve its worst-case pages from
+    is attached — each admission must reserve its cap-aware pages (its
+    own ``t + n`` span, not a worst-case slab stripe) from
     the node-wide pool, and pages released by ANY cohort's completed
     rows are immediately allocatable by every other (the historical
     min-headroom clamp that let one long-running cohort throttle every
@@ -639,38 +647,58 @@ class EngineContinuousExecutor(ContinuousExecutor):
         return eng.n_max if pool["state"] is None \
             else eng.headroom(pool["t"])
 
-    def _pages_needed(self, mid, fresh_rows: int = 1) -> int:
-        """Worst-case arena pages one admission into ``mid`` reserves at
-        the next boundary (0 for slab pools)."""
+    def _pages_needed(self, mid, r) -> int:
+        """Cap-aware arena pages admitting ``r`` into ``mid`` reserves
+        at the next boundary (0 for slab pools): the pages the row will
+        lease over its WHOLE life given its own cap ``min(n, n_max)`` at
+        the pool's current cohort step — initial prompt+first-write
+        lease plus every future segment-boundary top-up — not the
+        historical worst-case span to the end of the cache."""
         pool = self._pools[mid]
         if not pool.get("paged"):
             return 0
         eng = pool["engine"]
         t = 0 if pool["state"] is None else pool["t"]
-        return eng.pages_for_admission(t, self.arena.block_tokens) \
-            * fresh_rows
+        return eng.pages_for_admission(t, min(int(r.n), eng.n_max),
+                                       self.arena.block_tokens)
+
+    def _outstanding_pages(self) -> int:
+        """Pages live paged cohorts are still entitled to lease via
+        future top-ups (Σ ``lease_last - lease_end`` over resident
+        rows).  Charged against admission BEFORE this boundary's refills
+        land, so incremental top-ups can never race a fresh admission
+        into :class:`ArenaExhausted`."""
+        total = 0
+        for pool in self._pools.values():
+            if pool.get("paged") and pool["state"] is not None:
+                total += pool["engine"].lease_commitment(pool["state"])
+        return total
 
     def accepts(self, mid, r) -> bool:
         if not super().accepts(mid, r):
             return False
         pool = self._pools[mid]
         if pool.get("paged"):
-            # per-block admission: can this request's worst-case pages
-            # be reserved, on top of boundary admissions already
-            # pending?  (The multi_feasible oracle stays authoritative
-            # for the paper's constraints — this gates physical KV.)
-            need = self._pages_needed(mid)
-            if self.arena.free_pages - self._pending_pages < need:
+            # per-block admission: can this request's cap-aware pages be
+            # reserved, on top of boundary admissions already pending
+            # AND the top-up entitlement resident rows still hold?  (The
+            # multi_feasible oracle stays authoritative for the paper's
+            # constraints — this gates physical KV.)
+            need = self._pages_needed(mid, r)
+            budget = self.arena.free_pages - self._pending_pages \
+                - self._outstanding_pages()
+            if budget < need:
                 return False
         if pool["state"] is None:
             return True     # fresh cohort: full n_max headroom of its own
         return self.node_headroom(mid) >= min(r.n, pool["engine"].n_max)
 
     def place(self, mid, r, resume=None):
-        # reserve the candidate's worst-case pages against this boundary
+        # reserve the candidate's cap-aware pages against this boundary
         # so a burst of same-boundary admissions can't jointly overdraw
-        # the arena (released again once the refill actually leases)
-        self._pending_pages += self._pages_needed(mid)
+        # the arena (the reservation becomes the row's initial lease +
+        # top-up entitlement once the refill lands)
+        self._pending_pages += self._pages_needed(mid, r)
         super().place(mid, r, resume)
 
     def step(self, env, k):
@@ -790,6 +818,10 @@ class EngineContinuousExecutor(ContinuousExecutor):
         # ``_pending_pages`` until the next successful step resets it —
         # conservatively strict admission, never an arena overdraw.
         return removed
+
+    def topup_pages(self) -> int:
+        return sum(getattr(e, "lease_topups", 0)
+                   for e in self.engines.values())
 
     def block_usage(self):
         if self.arena is None:
@@ -1200,6 +1232,7 @@ class ContinuousRuntime(EpochRuntime):
         if counting:
             m.kv_alloc_tokens += alloc_tok
             m.kv_dead_tokens += max(0, alloc_tok - live_tok)
+            m.kv_topup_pages = self.cexec.topup_pages() - self._topup0
 
     def _record_finished(self, finished: Sequence, counting: bool,
                          m: EpochMetrics, trace: EpochTrace,
@@ -1248,6 +1281,7 @@ class ContinuousRuntime(EpochRuntime):
         n_seg = self.segments_per_epoch
         dt = T_E / n_seg
         self.cexec.bind(self.env)
+        self._topup0 = self.cexec.topup_pages()   # engines may be reused
         m = EpochMetrics(n_epochs=n_epochs, T_E=T_E)
         queue: List[Request] = []
         trace: Optional[EpochTrace] = None

@@ -85,7 +85,9 @@ class DegradationController:
     controller flips to degraded only after ``patience`` CONSECUTIVE
     pressured boundaries, and recovers only after ``patience``
     consecutive boundaries with the queue back at or below ``queue_low``
-    and attainment restored — the enter/exit thresholds are deliberately
+    and attainment restored over at least ``min_samples`` DEGRADED-ERA
+    finishes (the window is cleared on entry; an empty window is not
+    recovery evidence) — the enter/exit thresholds are deliberately
     separated (queue_high > queue_low) so a queue hovering at one
     threshold cannot make the controller oscillate."""
     queue_high: int = 12          # enter pressure at/above this depth
@@ -93,6 +95,10 @@ class DegradationController:
     attain_floor: float = 0.9     # recent-attainment pressure threshold
     patience: int = 2             # consecutive boundaries before flipping
     window: int = 64              # finishes in the attainment window
+    min_samples: int = 1          # degraded-era finishes required before
+                                  # the exit streak may count — recovery
+                                  # is judged on evidence, never on an
+                                  # empty window
     shed_below_priority: int = 0  # degraded mode sheds queued work with
                                   # priority < this (0 = never shed)
     degraded: bool = False
@@ -119,6 +125,15 @@ class DegradationController:
             or (att is not None and att < self.attain_floor)
         relaxed = queue_len <= self.queue_low \
             and (att is None or att >= self.attain_floor)
+        if self.degraded:
+            # ``_recent`` was cleared on entry, so ``att is None`` here
+            # means NOTHING finished in the degraded era — an empty
+            # window is no evidence of recovery.  Exit requires at least
+            # ``min_samples`` degraded-era finishes, all meeting the
+            # attainment floor on average (the documented "judge
+            # recovery on degraded-era finishes" contract).
+            relaxed = relaxed and att is not None \
+                and len(self._recent) >= max(1, self.min_samples)
         if not self.degraded:
             self._enter_streak = self._enter_streak + 1 if pressured else 0
             if self._enter_streak >= self.patience:

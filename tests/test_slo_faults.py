@@ -218,8 +218,34 @@ def test_degradation_hysteresis_needs_patience_both_ways():
     c = DegradationController(queue_high=10, queue_low=2, patience=2)
     assert not c.observe(50)              # one pressured boundary: no flip
     assert c.observe(50)                  # second: degraded
+    c.record_finish(True)                 # degraded-era recovery evidence
     assert c.observe(0)                   # one relaxed boundary: still on
     assert not c.observe(0)               # second: recovered
+
+
+def test_degradation_exit_requires_degraded_era_finishes():
+    """Regression: entering degraded mode clears the attainment window,
+    and the empty window (``att is None``) used to satisfy the relaxed
+    condition — the controller could declare recovery after ``patience``
+    idle boundaries during which NOTHING finished.  Exit now demands at
+    least ``min_samples`` degraded-era finishes as evidence."""
+    c = DegradationController(queue_high=10, queue_low=2, patience=2)
+    c.record_finish(False)                # pre-degraded backlog history
+    assert not c.observe(50)
+    assert c.observe(50)                  # entered; window cleared
+    assert c.recent_attainment is None
+    for _ in range(6):                    # relaxed queue, zero finishes:
+        assert c.observe(0)               # ...must stay degraded forever
+    c.record_finish(True)                 # first degraded-era finish
+    assert c.observe(0)                   # patience counts from HERE
+    assert not c.observe(0)               # evidence + patience: recovered
+    # min_samples > 1 demands that much evidence before the streak counts
+    c2 = DegradationController(queue_high=10, queue_low=2, patience=1,
+                               min_samples=2, degraded=True)
+    c2.record_finish(True)
+    assert c2.observe(0)                  # one finish < min_samples
+    c2.record_finish(True)
+    assert not c2.observe(0)              # two finishes: exit
 
 
 def test_degradation_sheds_only_below_priority_floor():
