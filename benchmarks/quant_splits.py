@@ -1,0 +1,129 @@
+"""Split epochs: per-batch quantization splits vs the best single method.
+
+The paper's scheduler picks ONE quantization method per epoch; the split
+extension (DESIGN.md §1.1) lets the (z, method) descent serve one
+epoch's queue as two sequential sub-batches at different precisions,
+with the measured weight-swap latency between them charged in the P2
+epoch time.  The win is real when a queue mixes accuracy demands: the
+tight-accuracy tail that forced the whole batch onto a conservative
+method (or out of the batch entirely) rides in its own sub-batch while
+the bulk serves at the fast precision.
+
+This benchmark freezes the paper's request mix over several queue seeds
+and compares, per queue:
+
+  * the best SINGLE-method schedule (max batch over every Table-II
+    method — a stronger baseline than ``quant=auto``, which also
+    optimizes compute time);
+  * the split schedule priced with a swap record MEASURED on a real
+    ``ServingEngine`` (``quant.calibration.measure_swap_cost``).
+
+Gate: the split never loses (ratio >= 1.0 on every queue — a descent
+that includes the no-split candidate can't) and strictly wins on at
+least one queue (ratio >= 1.1 somewhere), with the measured swap cost
+charged.
+
+Emits ``experiments/benchmarks/quant_splits.json``.  The committed
+artifact carries the full swap record, so ``tests/test_quant_splits.py``
+re-derives every decision from JSON alone — no re-timing — and pins the
+win forever.
+
+  PYTHONPATH=src python -m benchmarks.quant_splits [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import render, save_table
+from repro.config import get_arch
+from repro.core.dftsp import dftsp_schedule, dftsp_schedule_split
+from repro.core.environment import paper_env
+from repro.core.quantization import METHODS
+from repro.core.request import RequestGenerator
+from repro.quant.calibration import measure_swap_cost
+from repro.serving.engine import ServingEngine
+
+ARCH = "bloom-3b"
+REDUCED = dict(n_layers=1, d_model=64, n_heads=2, n_kv_heads=2,
+               d_ff=128, vocab=256)
+S_MAX, N_MAX = 16, 32
+QUEUE_SEEDS = [0, 1, 2, 3]
+QUEUE_SEEDS_FAST = [0, 2]
+QUEUE_RATE, QUEUE_HORIZON = 25.0, 2.0
+GATE_FLOOR, GATE_WIN = 1.0, 1.1
+
+
+def make_queue(seed: int):
+    """Deterministic request queue over the paper's length/accuracy mix."""
+    gen = RequestGenerator(rate=QUEUE_RATE, seed=seed)
+    return gen.within(0.0, QUEUE_HORIZON)
+
+
+def best_single(env, queue):
+    """The best single-method schedule: max batch over every method
+    (ties to the first, i.e. Table-II order)."""
+    name, size = None, -1
+    for m in METHODS.values():
+        batch, _ = dftsp_schedule(env, queue, quant=m)
+        if len(batch) > size:
+            name, size = m.name, len(batch)
+    return name, size
+
+
+def split_plan(env, queue, swap_record=None):
+    """Split schedule -> (total requests, [(n_sub, method), ...])."""
+    subs, _ = dftsp_schedule_split(env, queue, swap_record=swap_record)
+    return sum(len(b) for b, _ in subs), [(len(b), m.name) for b, m in subs]
+
+
+def run(fast: bool = False, seed: int = 0, quiet: bool = False):
+    cfg = get_arch(ARCH).scaled(**REDUCED)
+    eng = ServingEngine(cfg, batch_capacity=4, s_max=S_MAX, n_max=N_MAX,
+                        eos_id=-1, seed=seed)
+    record = measure_swap_cost(eng, iters=1 if fast else 3, seed=seed)
+
+    env = paper_env(ARCH, "W8A16")
+    rows = []
+    for qseed in (QUEUE_SEEDS_FAST if fast else QUEUE_SEEDS):
+        queue = make_queue(qseed)
+        s_name, s_batch = best_single(env, queue)
+        free_total, _ = split_plan(env, queue)
+        total, plan = split_plan(env, queue, swap_record=record)
+        ratio = total / s_batch if s_batch else 1.0
+        rows.append([qseed, len(queue), s_name, s_batch, free_total,
+                     total, " + ".join(f"{n}@{m}" for n, m in plan),
+                     round(ratio, 3)])
+
+    header = ["queue_seed", "n_queue", "single_method", "single_batch",
+              "split_free", "split_measured", "split_plan", "ratio"]
+    out = render(header, rows,
+                 "split epochs vs best single method (measured swap cost)")
+    if not quiet:
+        print(out)
+    ratios = [r[7] for r in rows]
+    ok = all(r >= GATE_FLOOR for r in ratios) and \
+        any(r >= GATE_WIN for r in ratios)
+    save_table("quant_splits", header, rows,
+               meta={"arch": ARCH, "reduced": REDUCED, "fast": fast,
+                     "queue": {"rate": QUEUE_RATE, "horizon": QUEUE_HORIZON,
+                               "seeds": [r[0] for r in rows]},
+                     "record": record,
+                     "gate": {"floor": GATE_FLOOR, "win": GATE_WIN}})
+    print(f"[quant_splits] split vs best single: ratios {ratios} "
+          f"(floor {GATE_FLOOR}, win {GATE_WIN} somewhere): "
+          f"{'PASS' if ok else 'FAIL'}")
+    return rows, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer queue seeds + timing iters (CI smoke)")
+    args = ap.parse_args(argv)
+    _, ok = run(fast=args.fast)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -93,9 +93,17 @@ def _annotate(env: EdgeEnv, reqs: Sequence[Request]) -> List[Request]:
 
 class _Ctx:
     """Precomputed (environment, method) quantities for incremental
-    checks.  ``quant=None`` reads the env's deployed method."""
+    checks.  ``quant=None`` reads the env's deployed method.
 
-    def __init__(self, env: EdgeEnv, quant: Optional[QuantMethod] = None):
+    ``extra_s`` / ``rho_u0`` / ``rho_d0`` seat the search behind serial
+    epoch time (earlier sub-batch compute + weight swap) and already-spent
+    spectrum — the residual view a SECONDARY sub-batch of a split epoch
+    is scheduled against.  All-zero is the paper's one-batch search.
+    """
+
+    def __init__(self, env: EdgeEnv, quant: Optional[QuantMethod] = None,
+                 extra_s: float = 0.0, rho_u0: float = 0.0,
+                 rho_d0: float = 0.0):
         self.env = env
         self.quant = quant or env.quant
         cm = env.cost_model()
@@ -105,6 +113,9 @@ class _Ctx:
         self.alpha_a = q.alpha_a
         self.prefill_flops = cm.prefill_flops(env.s_max, 1)
         self.beta = q.beta
+        self.extra_s = extra_s
+        self.rho_u0 = rho_u0
+        self.rho_d0 = rho_d0
 
 
 def _search(ctx: _Ctx, levels: List[int],
@@ -128,11 +139,13 @@ def _search(ctx: _Ctx, levels: List[int],
 
     def partial_violates(rho_u: float, rho_d: float, mem: float,
                          dec: float, slack: float) -> bool:
-        if rho_u > 1.0 + 1e-12 or rho_d > 1.0 + 1e-12:
+        if (ctx.rho_u0 + rho_u > 1.0 + 1e-12
+                or ctx.rho_d0 + rho_d > 1.0 + 1e-12):
             return True
         if mem_base + mem > env.M + 1e-6:
             return True
-        t = env.T_U + comp_base + ctx.beta * dec / env.C + env.T_D
+        t = (env.T_U + ctx.extra_s + comp_base
+             + ctx.beta * dec / env.C + env.T_D)
         return t > slack + 1e-12
 
     def dfs(k: int, remaining: int, rho_u: float, rho_d: float,
@@ -144,7 +157,8 @@ def _search(ctx: _Ctx, levels: List[int],
         if remaining == 0:
             stats.leaves_checked += 1
             cand = list(chosen)
-            if _check(env, cand, ctx.quant):
+            if _check(env, cand, ctx.quant, extra_s=ctx.extra_s,
+                      rho_u0=ctx.rho_u0, rho_d0=ctx.rho_d0):
                 return cand
             return None
         if k == K:
@@ -173,26 +187,29 @@ def _search(ctx: _Ctx, levels: List[int],
 
 
 def _check(env: EdgeEnv, cand: List[Request],
-           quant: Optional[QuantMethod] = None) -> bool:
+           quant: Optional[QuantMethod] = None, extra_s: float = 0.0,
+           rho_u0: float = 0.0, rho_d0: float = 0.0) -> bool:
     """Constraints (2b)-(2e) on a complete leaf (authoritative oracle)."""
-    if sum(r.rho_u for r in cand) > 1.0 + 1e-12:
+    if rho_u0 + sum(r.rho_u for r in cand) > 1.0 + 1e-12:
         return False
-    if sum(r.rho_d for r in cand) > 1.0 + 1e-12:
+    if rho_d0 + sum(r.rho_d for r in cand) > 1.0 + 1e-12:
         return False
     if not problem.memory_feasible(env, cand, quant):
         return False
-    return problem.latency_feasible(env, cand, quant=quant)
+    return problem.latency_feasible(env, cand, quant=quant, t_extra=extra_s)
 
 
 def _z_upper_bound(env: EdgeEnv, pool: List[Request],
-                   quant: Optional[QuantMethod] = None) -> int:
+                   quant: Optional[QuantMethod] = None,
+                   extra_s: float = 0.0, rho_u0: float = 0.0,
+                   rho_d0: float = 0.0) -> int:
     """Cheap per-constraint bound on the max feasible batch size (sound:
     each constraint is evaluated with its own most-favorable requests)."""
     ctx = _Ctx(env, quant)
     n = len(pool)
     # bandwidth bounds
-    z_u = _greedy_bound(sorted(r.rho_u for r in pool), 1.0)
-    z_d = _greedy_bound(sorted(r.rho_d for r in pool), 1.0)
+    z_u = _greedy_bound(sorted(r.rho_u for r in pool), 1.0 - rho_u0)
+    z_d = _greedy_bound(sorted(r.rho_d for r in pool), 1.0 - rho_d0)
     # memory: weights + z*(prefill + cheapest decode KV)
     kvs = sorted(r.kv_tok * ctx.alpha_a for r in pool)
     z_m = 0
@@ -204,7 +221,7 @@ def _z_upper_bound(env: EdgeEnv, pool: List[Request],
         z_m += 1
     # latency: z*(prefill) + cheapest decode flops vs best slack
     best_slack = max((r.tau - r.t_w for r in pool), default=0.0) \
-        - env.T_U - env.T_D
+        - env.T_U - env.T_D - extra_s
     decs = sorted(r.dec_flops for r in pool)
     z_t, tot = 0, 0.0
     for dflops in decs:
@@ -248,24 +265,31 @@ def dftsp_schedule(env: EdgeEnv, requests: Sequence[Request],
                    prune: bool = True, order_desc: bool = True,
                    d_sweep: bool = True, fast_z_bound: bool = True,
                    stats: Optional[SearchStats] = None,
-                   quant: Optional[QuantMethod] = None
+                   quant: Optional[QuantMethod] = None,
+                   extra_s: float = 0.0, rho_u0: float = 0.0,
+                   rho_d0: float = 0.0
                    ) -> Tuple[List[Request], SearchStats]:
     """Run Algorithm 1.  Returns (optimal batch S, search stats).
 
     ``prune=False, order_desc=False, fast_z_bound=False`` is the
     brute-force benchmark of Table III (same solution, more nodes).
     ``quant`` evaluates every constraint under an explicit method instead
-    of the env's deployed one.
+    of the env's deployed one.  ``extra_s``/``rho_u0``/``rho_d0`` run the
+    search against a residual epoch (time already queued serially ahead
+    of this batch, spectrum already committed) — the secondary-sub-batch
+    view of ``dftsp_schedule_split``; zeros are the paper's search.
     """
     stats = stats or SearchStats()
     pool = problem.filter_accuracy(env, requests, quant)
     if not pool:
         return [], stats
     pool = _annotate(env, pool)
-    ctx = _Ctx(env, quant)
-    coeff = problem.P2Coefficients(env, quant)
+    ctx = _Ctx(env, quant, extra_s=extra_s, rho_u0=rho_u0, rho_d0=rho_d0)
+    coeff = problem.P2Coefficients(env, quant, extra_s=extra_s)
 
-    z_start = _z_upper_bound(env, pool, quant) if fast_z_bound else len(pool)
+    z_start = _z_upper_bound(env, pool, quant, extra_s=extra_s,
+                             rho_u0=rho_u0, rho_d0=rho_d0) \
+        if fast_z_bound else len(pool)
     for z in range(z_start, 0, -1):
         hit = _solve_z(ctx, coeff, pool, z, stats, prune, order_desc,
                        d_sweep)
@@ -323,3 +347,101 @@ def dftsp_schedule_auto(env: EdgeEnv, requests: Sequence[Request],
                 stats.z_solved = z
                 return hit, m, stats
     return [], env.quant, stats
+
+
+def dftsp_schedule_split(env: EdgeEnv, requests: Sequence[Request],
+                         methods: Optional[Sequence[QuantMethod]] = None,
+                         swap_record: Optional[dict] = None,
+                         prune: bool = True, order_desc: bool = True,
+                         d_sweep: bool = True, fast_z_bound: bool = True,
+                         stats: Optional[SearchStats] = None,
+                         rho_u0: float = 0.0, rho_d0: float = 0.0,
+                         extra_s: float = 0.0
+                         ) -> Tuple[List[Tuple[List[Request], QuantMethod]],
+                                    SearchStats]:
+    """Split-epoch extension of ``dftsp_schedule_auto``: one epoch's queue
+    may be served as TWO sequential sub-batches at different quantization
+    methods, with the measured weight-swap latency between them charged in
+    the P2 epoch time (DESIGN.md §1.1).
+
+    Returns ``([(batch, method), ...], stats)`` — one entry for a single-
+    method epoch (identical to ``dftsp_schedule_auto``'s answer), two when
+    a split strictly serves more requests with the swap cost charged.
+
+    The descent explores split points (primary method x primary batch x
+    secondary method) with online pruning:
+
+    * **swap-domination prune** — a (primary, secondary) pair is dominated
+      when the swap cost plus the primary's compute eats the residual
+      queue's entire slack: the secondary's cheap z-bound at the charged
+      serial offset is 0, so no sub-batch can repay the swap.  Skipped
+      without searching (``stats.pruned``).
+    * **capacity prune** — a pair whose optimistic total (primary size +
+      secondary z-bound) cannot beat the incumbent is skipped.
+
+    A split is only adopted when it serves STRICTLY more than the best
+    single-method schedule — at equal service the swap only adds epoch
+    time — so split throughput >= single-method throughput by
+    construction, with swap costs charged (the property
+    ``tests/test_quant_splits.py`` pins).
+    """
+    from repro.core.quantization import swap_seconds
+    stats = stats or SearchStats()
+    kw = dict(prune=prune, order_desc=order_desc, d_sweep=d_sweep,
+              fast_z_bound=fast_z_bound)
+
+    best_sel, best_m, _ = dftsp_schedule_auto(
+        env, requests, methods=methods, stats=stats, **kw)
+    if not best_sel:
+        return [], stats
+    best: List[Tuple[List[Request], QuantMethod]] = [(best_sel, best_m)]
+    best_total = len(best_sel)
+
+    model = env.model.arch_id
+    cands = candidate_methods(model, accuracies=[r.a for r in requests],
+                              methods=methods)
+    annotated = _annotate(env, requests)
+    if len(cands) < 2 or best_total >= len(annotated):
+        return best, stats        # nothing left to split toward
+
+    for m_p in cands:
+        # primary sub-batch: the best batch this method alone can serve
+        if m_p.name == best_m.name:
+            sel_p = best_sel
+        else:
+            sel_p, _ = dftsp_schedule(env, annotated, quant=m_p,
+                                      stats=stats, extra_s=extra_s,
+                                      rho_u0=rho_u0, rho_d0=rho_d0, **kw)
+        if not sel_p:
+            continue
+        taken = {r.rid for r in sel_p}
+        residual = [r for r in annotated if r.rid not in taken]
+        if not residual:
+            continue
+        t_primary = problem.batch_compute_time(env, sel_p, quant=m_p)
+        rho_u1 = rho_u0 + sum(r.rho_u for r in sel_p)
+        rho_d1 = rho_d0 + sum(r.rho_d for r in sel_p)
+        for m_s in cands:
+            if m_s.name == m_p.name:
+                continue
+            pool_s = problem.filter_accuracy(env, residual, m_s)
+            if not pool_s:
+                continue
+            serial = extra_s + t_primary + swap_seconds(swap_record,
+                                                        m_p, m_s)
+            z2_bound = _z_upper_bound(env, pool_s, m_s, extra_s=serial,
+                                      rho_u0=rho_u1, rho_d0=rho_d1)
+            if z2_bound < 1:          # swap-domination prune
+                stats.pruned += 1
+                continue
+            if len(sel_p) + min(z2_bound, len(pool_s)) <= best_total:
+                stats.pruned += 1     # capacity prune
+                continue
+            sel_s, _ = dftsp_schedule(env, pool_s, quant=m_s, stats=stats,
+                                      extra_s=serial, rho_u0=rho_u1,
+                                      rho_d0=rho_d1, **kw)
+            if len(sel_p) + len(sel_s) > best_total:
+                best = [(sel_p, m_p), (sel_s, m_s)]
+                best_total = len(sel_p) + len(sel_s)
+    stats.z_solved = best_total
+    return best, stats

@@ -149,6 +149,9 @@ class EpochMetrics:
                                   # pools quarantined after N consecutive
                                   # step failures
     degraded_segments: int = 0    # segments run in degraded mode
+    requanted: int = 0            # LIVE cohorts re-pointed at a degraded
+                                  # method on a degradation rising edge
+                                  # (mid-flight requant, DESIGN.md §2.4)
 
     @property
     def throughput(self) -> float:

@@ -24,9 +24,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import comm, problem
-from repro.core.dftsp import SearchStats, dftsp_schedule, dftsp_schedule_auto
+from repro.core.dftsp import (SearchStats, dftsp_schedule,
+                              dftsp_schedule_auto, dftsp_schedule_split)
 from repro.core.environment import EdgeEnv
-from repro.core.quantization import QuantMethod, get_method
+from repro.core.quantization import QuantMethod, get_method, swap_seconds
 from repro.core.request import Request
 
 
@@ -131,6 +132,29 @@ def multi_dftsp_assign(menv: MultiLLMEnv, requests: Sequence[Request],
     behavior), ``"auto"`` (per-model throughput-optimal method via
     ``dftsp_schedule_auto``), or a METHODS name pinning every model.
     """
+    batches, quants, _, stats = multi_dftsp_assign_split(
+        menv, requests, order=order, quant=quant, split=False)
+    return batches, quants, stats
+
+
+def multi_dftsp_assign_split(menv: MultiLLMEnv,
+                             requests: Sequence[Request],
+                             order: str = "weight", quant: str = "env",
+                             split: bool = True,
+                             swap_record: Optional[dict] = None
+                             ) -> Tuple[Dict[str, List[Request]],
+                                        Dict[str, QuantMethod],
+                                        Dict[str, List[Tuple[List[Request],
+                                                             QuantMethod]]],
+                                        SearchStats]:
+    """``multi_dftsp_assign`` with the split-epoch extension: each hosted
+    model's residual-budget DFTSP may split its queue into two
+    differently-quantized sub-batches (``dftsp_schedule_split``), with the
+    measured weight-swap latency charged in that model's slot of the
+    sequential compute queue.  Returns ``(batches, quants, splits, stats)``
+    — ``splits[mid]`` present only when that model actually split;
+    ``quants[mid]`` is then the primary sub-batch's method.
+    """
     stats = SearchStats()
     by_model: Dict[str, List[Request]] = {m: [] for m in menv.envs}
     for r in requests:
@@ -140,9 +164,10 @@ def multi_dftsp_assign(menv: MultiLLMEnv, requests: Sequence[Request],
     visit = model_order(menv, order)
 
     quants: Dict[str, QuantMethod] = {m: e.quant for m, e in menv.envs.items()}
+    splits: Dict[str, List[Tuple[List[Request], QuantMethod]]] = {}
     mem_left = menv.M - menv.weight_bytes()
     if mem_left < 0:
-        return {m: [] for m in menv.envs}, quants, stats
+        return {m: [] for m in menv.envs}, quants, splits, stats
     rho_u_left = rho_d_left = 1.0
     t_queued = 0.0
     out: Dict[str, List[Request]] = {}
@@ -158,7 +183,13 @@ def multi_dftsp_assign(menv: MultiLLMEnv, requests: Sequence[Request],
         own_w = env.quant.alpha_w * W
         res_env = env.with_(M=own_w + max(mem_left, 0.0),
                             T_U=env.T_U + t_queued)
-        if quant == "auto":
+        subs: List[Tuple[List[Request], QuantMethod]] = []
+        if split and quant == "auto":
+            subs, st = dftsp_schedule_split(res_env, pool,
+                                            swap_record=swap_record)
+            sel = [r for b, _ in subs for r in b]
+            q_m = subs[0][1] if subs else env.quant
+        elif quant == "auto":
             sel, q_m, st = dftsp_schedule_auto(res_env, pool)
         else:
             q_m = env.quant if quant == "env" else get_method(quant)
@@ -175,11 +206,40 @@ def multi_dftsp_assign(menv: MultiLLMEnv, requests: Sequence[Request],
                 kept.append(r)
                 rho_u_left -= ru
                 rho_d_left -= rd
-        while kept and not problem.latency_feasible(res_env, kept,
-                                                    quant=q_m):
-            kept.pop()   # shed the costliest-uplink member until feasible
+
+        def _kept_subs() -> List[Tuple[List[Request], QuantMethod]]:
+            ids = {r.rid for r in kept}
+            return [([r for r in b if r.rid in ids], q)
+                    for b, q in subs if any(r.rid in ids for r in b)]
+
+        if subs:
+            while kept and not problem.split_feasible(
+                    res_env, _kept_subs(), swap_record=swap_record):
+                kept.pop()   # shed costliest-uplink member until feasible
+            subs = [(b, q) for b, q in _kept_subs() if b]
+            kept = [r for b, _ in subs for r in b]
+            quants[mid] = q_m = subs[0][1] if subs else env.quant
+        else:
+            while kept and not problem.latency_feasible(res_env, kept,
+                                                        quant=q_m):
+                kept.pop()   # shed costliest-uplink member until feasible
         out[mid] = kept
-        if kept:
+        if len(subs) > 1:
+            splits[mid] = subs
+        if kept and subs:
+            # sequential sub-batches: KV peaks at the largest sub-batch,
+            # weight residency at the heaviest sub-method; epoch time adds
+            # every sub-batch's compute plus the inter-sub swap latency
+            mem_left -= (max(_kv_bytes(env, b, q) for b, q in subs)
+                         + (max(q.alpha_w for _, q in subs)
+                            - env.quant.alpha_w) * W)
+            prev = None
+            for b, q in subs:
+                if prev is not None:
+                    t_queued += swap_seconds(swap_record, prev, q)
+                t_queued += problem.batch_compute_time(env, b, quant=q)
+                prev = q
+        elif kept:
             # KV under the decided method, plus the weight delta if the
             # decision re-quantized this model's residency
             mem_left -= (_kv_bytes(env, kept, q_m)
@@ -188,7 +248,7 @@ def multi_dftsp_assign(menv: MultiLLMEnv, requests: Sequence[Request],
         else:
             quants[mid] = env.quant     # nothing served: keep the default
     stats.z_solved = sum(len(v) for v in out.values())
-    return out, quants, stats
+    return out, quants, splits, stats
 
 
 def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
@@ -202,35 +262,62 @@ def multi_dftsp(menv: MultiLLMEnv, requests: Sequence[Request],
 
 def multi_feasible(menv: MultiLLMEnv, batches: Dict[str, List[Request]],
                    order: str = "weight",
-                   quants: Optional[Dict[str, QuantMethod]] = None) -> bool:
+                   quants: Optional[Dict[str, QuantMethod]] = None,
+                   splits: Optional[Dict[str, List[Tuple[List[Request],
+                                                         QuantMethod]]]]
+                   = None,
+                   swap_record: Optional[dict] = None) -> bool:
     """Authoritative feasibility oracle for a joint multi-model schedule:
     shared OFDMA spectrum, shared memory pool, and per-request deadlines
     under the sequential single-compute-slot execution in ``order``.
     ``quants`` evaluates each model's constraints (weight residency, KV
-    factors, compute scale, accuracy) under its decided method."""
+    factors, compute scale, accuracy) under its decided method.
+
+    ``splits`` (the split-epoch extension) overrides a model's single
+    method with its ordered ``(sub_batch, method)`` list: accuracy is
+    checked per sub-batch at its OWN method, memory at the peak across
+    the sequential sub-batches (largest KV footprint, heaviest weight
+    residency), and latency serially — a request in sub-batch j waits
+    through every earlier model's compute, its own model's earlier
+    sub-batches, and the inter-sub weight swaps (``swap_record``).
+    """
     quants = quants or {}
+    splits = splits or {}
 
     def q_for(mid: str) -> QuantMethod:
         return quants.get(mid) or menv.envs[mid].quant
 
+    def subs_for(mid: str, batch: List[Request]
+                 ) -> List[Tuple[List[Request], QuantMethod]]:
+        subs = splits.get(mid)
+        return subs if subs else [(batch, q_for(mid))]
+
     rho_u = rho_d = 0.0
-    mem = sum(q_for(m).alpha_w * e.cost_model().weight_bytes()
-              for m, e in menv.envs.items())
+    mem = 0.0
+    for m, e in menv.envs.items():
+        alphas = [q.alpha_w for _, q in splits.get(m, [])] \
+            or [q_for(m).alpha_w]
+        mem += max(alphas) * e.cost_model().weight_bytes()
     for mid, batch in batches.items():
         env = menv.envs.get(mid)
         if env is None:
             if batch:              # non-empty batch for an unhosted model
                 return False
             continue
-        for r in batch:
-            if r.model_id != mid:
-                return False
-            if not problem.accuracy_feasible(env, r, q_for(mid)):
-                return False
-            rho_u += comm.rho_min_up(env, r)
-            rho_d += comm.rho_min_down(env, r)
+        subs = subs_for(mid, batch)
+        if sorted(r.rid for b, _ in subs for r in b) != \
+                sorted(r.rid for r in batch):
+            return False           # splits must partition the flat batch
+        for sub, q in subs:
+            for r in sub:
+                if r.model_id != mid:
+                    return False
+                if not problem.accuracy_feasible(env, r, q):
+                    return False
+                rho_u += comm.rho_min_up(env, r)
+                rho_d += comm.rho_min_down(env, r)
         if batch:
-            mem += _kv_bytes(env, batch, q_for(mid))
+            mem += max(_kv_bytes(env, sub, q) for sub, q in subs)
     if rho_u > 1.0 + 1e-9 or rho_d > 1.0 + 1e-9:
         return False
     if mem > menv.M + 1e-6:
@@ -241,9 +328,14 @@ def multi_feasible(menv: MultiLLMEnv, batches: Dict[str, List[Request]],
         if not batch:
             continue
         env = menv.envs[mid]
-        t = problem.batch_compute_time(env, batch, quant=q_for(mid))
-        for r in batch:
-            if r.t_w + env.T_U + t_queued + t + env.T_D > r.tau + 1e-9:
-                return False
-        t_queued += t
+        prev: Optional[QuantMethod] = None
+        for sub, q in subs_for(mid, batch):
+            if prev is not None:
+                t_queued += swap_seconds(swap_record, prev, q)
+            t = problem.batch_compute_time(env, sub, quant=q)
+            for r in sub:
+                if r.t_w + env.T_U + t_queued + t + env.T_D > r.tau + 1e-9:
+                    return False
+            t_queued += t
+            prev = q
     return True

@@ -34,7 +34,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
 from repro.core import multi as _multi
 from repro.core import problem
 from repro.core import schedulers as _legacy
-from repro.core.dftsp import SearchStats, dftsp_schedule, dftsp_schedule_auto
+from repro.core.dftsp import (SearchStats, dftsp_schedule,
+                              dftsp_schedule_auto, dftsp_schedule_split)
 from repro.core.environment import EdgeEnv
 from repro.core.quantization import METHODS, QuantMethod, get_method
 from repro.core.request import Request
@@ -83,10 +84,21 @@ class Decision:
     records the method the control plane decided for each batch; a
     missing key means "the env's deployed method" (so fixed-method
     policies stay bit-identical to the pre-decision behavior).
+
+    ``splits`` carries the split-epoch extension (DESIGN.md §1.1): when a
+    model's entry is present, its epoch queue is served as that ordered
+    list of ``(sub_batch, method)`` pairs — sequentially, each at its own
+    precision, with the weight-swap cost between them charged in epoch
+    time.  The flat ``batches[mid]`` ALWAYS equals the concatenation of
+    the sub-batches (so ``selected``/``size``/executor admission are
+    split-agnostic), and ``quants[mid]`` records the PRIMARY (first)
+    sub-batch's method.
     """
     batches: Dict[Optional[str], List[Request]]
     stats: SearchStats = field(default_factory=SearchStats)
     quants: Dict[Optional[str], QuantMethod] = field(default_factory=dict)
+    splits: Dict[Optional[str], List[Tuple[List[Request], QuantMethod]]] = \
+        field(default_factory=dict)
 
     @classmethod
     def single(cls, selected: Sequence[Request],
@@ -95,6 +107,17 @@ class Decision:
         return cls(batches={None: list(selected)},
                    stats=stats or SearchStats(),
                    quants={} if quant is None else {None: quant})
+
+    def sub_batches(self, model_id: Optional[str], env: Env
+                    ) -> List[Tuple[List[Request], QuantMethod]]:
+        """The (batch, method) sub-batches serving ``model_id`` — the
+        recorded split when one exists, else the whole batch at the
+        decided (or deployed) method."""
+        subs = self.splits.get(model_id)
+        if subs:
+            return subs
+        batch = self.batches.get(model_id, [])
+        return [(batch, self.quant_for(model_id, env))] if batch else []
 
     def quant_for(self, model_id: Optional[str], env: Env) -> QuantMethod:
         """The method this decision serves ``model_id`` with (falls back
@@ -268,17 +291,23 @@ class DftspPolicy(SchedulerPolicy):
 
     def __init__(self, prune: bool = True, order_desc: bool = True,
                  d_sweep: bool = True, fast_z_bound: bool = True,
-                 quant: str = "env", calib: str = "table2"):
+                 quant: str = "env", calib: str = "table2",
+                 split: bool = False):
         if calib not in ("table2", "measured"):
             raise ValueError(f"unknown calib source {calib!r} "
                              "(expected table2|measured)")
+        if split and quant != "auto":
+            raise ValueError("split=true needs quant=auto — a split epoch "
+                             "is a choice BETWEEN methods per sub-batch")
         self.prune = prune
         self.order_desc = order_desc
         self.d_sweep = d_sweep
         self.fast_z_bound = fast_z_bound
         self.quant = quant
         self.calib = calib
+        self.split = split
         self._measured: Optional[Dict[str, QuantMethod]] = None
+        self._swap_record: Optional[Dict] = None
         if quant != "auto":
             _resolve_quant_param(quant)     # fail fast on bad names
 
@@ -286,6 +315,13 @@ class DftspPolicy(SchedulerPolicy):
         """Install engine-measured QuantMethod records (used by the auto
         descent when ``calib="measured"``)."""
         self._measured = dict(methods)
+
+    def install_swap_costs(self, record: Optional[Dict]) -> None:
+        """Install a ``quant/calibration.measure_swap_cost`` record: the
+        split descent and the split oracle then charge the MEASURED
+        weight-swap latency between sub-batch methods (no record = the
+        Table-II reproduction's free-swap pricing)."""
+        self._swap_record = dict(record) if record else None
 
     def _method_pool(self):
         """The candidate METHODS the auto descent draws from, or None for
@@ -302,6 +338,15 @@ class DftspPolicy(SchedulerPolicy):
     def schedule(self, env: EdgeEnv, queue: Sequence[Request]) -> Decision:
         kw = dict(prune=self.prune, order_desc=self.order_desc,
                   d_sweep=self.d_sweep, fast_z_bound=self.fast_z_bound)
+        if self.split:
+            subs, stats = dftsp_schedule_split(
+                env, queue, methods=self._method_pool(),
+                swap_record=self._swap_record, **kw)
+            flat = [r for b, _ in subs for r in b]
+            return Decision(
+                batches={None: flat}, stats=stats,
+                quants={None: subs[0][1]} if subs else {},
+                splits={None: subs} if len(subs) > 1 else {})
         if self.quant == "auto":
             sel, method, stats = dftsp_schedule_auto(
                 env, queue, methods=self._method_pool(), **kw)
@@ -309,6 +354,17 @@ class DftspPolicy(SchedulerPolicy):
         q = _resolve_quant_param(self.quant)
         sel, stats = dftsp_schedule(env, queue, quant=q, **kw)
         return Decision.single(sel, stats, quant=q)
+
+    def validate(self, env: EdgeEnv, decision: Decision) -> bool:
+        """Split-aware oracle: a split decision is checked per sub-batch
+        at its OWN method with the swap cost charged serially
+        (``problem.split_feasible``); single-method decisions keep the
+        historical flat P1 check."""
+        subs = decision.splits.get(None)
+        if subs:
+            return problem.split_feasible(env, subs,
+                                          swap_record=self._swap_record)
+        return super().validate(env, decision)
 
     def select_quant(self, env: EdgeEnv, model_id: Optional[str],
                      batch: Sequence[Request]) -> Optional[QuantMethod]:
@@ -403,17 +459,30 @@ class MultiDftspPolicy(SchedulerPolicy):
     sequential compute slot).  ``order`` picks the model visit order;
     ``quant="auto"`` selects each hosted model's method per epoch."""
 
-    def __init__(self, order: str = "weight", quant: str = "env"):
+    def __init__(self, order: str = "weight", quant: str = "env",
+                 split: bool = False):
         if order not in ("weight", "name", "load"):
             raise ValueError(f"unknown model order {order!r} "
                              "(expected weight|name|load)")
+        if split and quant != "auto":
+            raise ValueError("split=true needs quant=auto — a split epoch "
+                             "is a choice BETWEEN methods per sub-batch")
         self.order = order
         self.quant = quant
+        self.split = split
+        self._swap_record: Optional[Dict] = None
         if quant != "auto":
             _resolve_quant_param(quant)     # fail fast on bad names
 
     def schedule(self, menv: "_multi.MultiLLMEnv",
                  queue: Sequence[Request]) -> Decision:
+        if self.split:
+            batches, quants, splits, stats = \
+                _multi.multi_dftsp_assign_split(
+                    menv, queue, order=self.order, quant=self.quant,
+                    swap_record=self._swap_record)
+            return Decision(batches=dict(batches), stats=stats,
+                            quants=dict(quants), splits=dict(splits))
         batches, quants, stats = _multi.multi_dftsp_assign(
             menv, queue, order=self.order, quant=self.quant)
         if self.quant == "env":
@@ -425,12 +494,19 @@ class MultiDftspPolicy(SchedulerPolicy):
                  decision: Decision) -> bool:
         return _multi.multi_feasible(menv, decision.batches,
                                      order=self.order,
-                                     quants=decision.quants)
+                                     quants=decision.quants,
+                                     splits=decision.splits,
+                                     swap_record=self._swap_record)
 
     def install_measured(self, methods: Dict[str, QuantMethod]) -> None:
         """Engine-measured QuantMethod records for the per-cohort auto
         descent (same contract as DftspPolicy.install_measured)."""
         self._measured = dict(methods)
+
+    def install_swap_costs(self, record: Optional[Dict]) -> None:
+        """Measured weight-swap record for split pricing (same contract
+        as DftspPolicy.install_swap_costs)."""
+        self._swap_record = dict(record) if record else None
 
     def select_quant(self, menv: "_multi.MultiLLMEnv",
                      model_id: Optional[str],

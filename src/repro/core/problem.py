@@ -63,14 +63,21 @@ def batch_compute_time(env: EdgeEnv, reqs: Sequence[Request],
 
 def latency_feasible(env: EdgeEnv, reqs: Sequence[Request],
                      t_compute: Optional[float] = None,
-                     quant: Optional[QuantMethod] = None) -> bool:
-    """(1d): every scheduled request meets its deadline."""
+                     quant: Optional[QuantMethod] = None,
+                     t_extra: float = 0.0) -> bool:
+    """(1d): every scheduled request meets its deadline.
+
+    ``t_extra`` is serial epoch time spent BEFORE this batch computes —
+    an earlier sub-batch's compute plus the weight-swap latency when the
+    epoch's queue is split across quantization methods (DESIGN.md §1.1).
+    The default 0.0 is the paper's one-batch-per-epoch accounting.
+    """
     if not reqs:
         return True
     if t_compute is None:
         t_compute = batch_compute_time(env, reqs, quant)
     slack = min(r.tau - r.t_w for r in reqs)
-    return env.T_U + t_compute + env.T_D <= slack + 1e-12
+    return env.T_U + t_extra + t_compute + env.T_D <= slack + 1e-12
 
 
 def feasible(env: EdgeEnv, reqs: Sequence[Request],
@@ -86,6 +93,51 @@ def feasible(env: EdgeEnv, reqs: Sequence[Request],
             and latency_feasible(env, reqs, quant=quant))
 
 
+def split_feasible(env: EdgeEnv,
+                   subs: Sequence[tuple],
+                   swap_record: Optional[dict] = None,
+                   t_extra: float = 0.0,
+                   rho_u0: float = 0.0, rho_d0: float = 0.0) -> bool:
+    """P1 feasibility of a SPLIT epoch: ``subs`` is a sequence of
+    ``(batch, quant)`` sub-batches served sequentially within one epoch,
+    each at its own quantization method (DESIGN.md §1.1).
+
+    * comm (1a/1b) is joint — every sub-batch's transfers share the
+      epoch's OFDMA budget (``rho_*0`` lets multi-LLM callers charge
+      spectrum other models already hold);
+    * accuracy (1e) and memory (1c) are per-sub-batch at its OWN method —
+      sub-batches execute back to back, so a sub-batch's KV is released
+      before the next one allocates (peak, not sum);
+    * latency (1d) is serial: sub-batch j waits through every earlier
+      sub-batch's compute plus the measured weight-swap latency between
+      consecutive methods (``quantization.swap_seconds``; ``t_extra``
+      seats the whole split behind already-queued compute).
+    """
+    from repro.core.quantization import swap_seconds
+    subs = [(list(b), q) for b, q in subs if b]
+    flat = [r for b, _ in subs for r in b]
+    if not flat:
+        return True
+    rho_u = rho_u0 + sum(comm.rho_min_up(env, r) for r in flat)
+    rho_d = rho_d0 + sum(comm.rho_min_down(env, r) for r in flat)
+    if rho_u > 1.0 + 1e-9 or rho_d > 1.0 + 1e-9:
+        return False
+    t_ahead = t_extra
+    prev_q = None
+    for batch, q in subs:
+        if not all(accuracy_feasible(env, r, q) for r in batch):
+            return False
+        if not memory_feasible(env, batch, q):
+            return False
+        if prev_q is not None:
+            t_ahead += swap_seconds(swap_record, prev_q, q)
+        if not latency_feasible(env, batch, quant=q, t_extra=t_ahead):
+            return False
+        t_ahead += batch_compute_time(env, batch, quant=q)
+        prev_q = q
+    return True
+
+
 # ---------------------------------------------------------------------------
 # P2 k-coefficients (paper §III-A) — used by DFTSP's sort keys and by tests
 # that verify the reformulation matches the direct constraint oracles.
@@ -94,10 +146,20 @@ def feasible(env: EdgeEnv, reqs: Sequence[Request],
 
 @dataclass(frozen=True)
 class P2Coefficients:
-    """tau_tilde_i = (tau_i - t_w,i - T_U - T_D) * C / beta - k3 * z ;
-    M_tilde = k2 - s' z  (in KV-token units)."""
+    """tau_tilde_i = (tau_i - t_w,i - T_U - T_D - extra_s) * C / beta - k3 z ;
+    M_tilde = k2 - s' z  (in KV-token units).
+
+    ``extra_s`` is the swap-cost term of the split-epoch extension: serial
+    seconds already spent in this epoch before this batch's compute starts
+    (earlier differently-quantized sub-batches plus the measured weight-swap
+    latency between their methods).  It enters the slack the same way T_U
+    does — every request in this sub-batch waits through it — so the
+    slack ranking and the descent's bounds price splits consistently with
+    the authoritative oracle (``latency_feasible(..., t_extra=extra_s)``).
+    """
     env: EdgeEnv
     quant: Optional[QuantMethod] = None
+    extra_s: float = 0.0
 
     @property
     def q(self) -> QuantMethod:
@@ -109,7 +171,8 @@ class P2Coefficients:
         env = self.env
         cm = env.cost_model()
         k3 = cm.prefill_flops(env.s_max, 1)
-        slack_flops = (r.tau - r.t_w - env.T_U - env.T_D) * env.C / self.q.beta
+        slack_flops = ((r.tau - r.t_w - env.T_U - env.T_D - self.extra_s)
+                       * env.C / self.q.beta)
         return slack_flops - k3 * z
 
     def decode_cost(self, r: Request) -> float:

@@ -94,6 +94,34 @@ def get_method(name: str) -> QuantMethod:
     return METHODS[name]
 
 
+def swap_seconds(record: Optional[Dict], m_from: Optional[QuantMethod],
+                 m_to: Optional[QuantMethod]) -> float:
+    """Weight-swap latency (seconds) charged when an epoch re-serves from
+    ``m_from``'s to ``m_to``'s weight residency, looked up in a
+    ``quant/calibration.measure_swap_cost`` record.
+
+    Methods sharing a canonical serving precision (the record's
+    ``methods`` map — e.g. W8A16 and W8A8 both canonicalize to int8
+    weights on interpret backends) swap for free; unmeasured transitions
+    fall back to the record's ``default_s`` (the worst measured pair).
+    ``record=None`` charges nothing — the Table-II reproduction has no
+    swap model, so un-calibrated schedulers keep the historical pricing.
+    """
+    if record is None or m_from is None or m_to is None:
+        return 0.0
+    names = record.get("methods", {})
+    a = names.get(getattr(m_from, "name", m_from))
+    b = names.get(getattr(m_to, "name", m_to))
+    if a is None or b is None:
+        return float(record.get("default_s", 0.0))
+    if a == b:
+        return 0.0
+    pair = record.get("pairs", {}).get(f"{a}->{b}")
+    if pair is None:
+        return float(record.get("default_s", 0.0))
+    return float(pair["swap_s"])
+
+
 # ---------------------------------------------------------------------------
 # Method selection (quantization as a scheduling decision)
 # ---------------------------------------------------------------------------

@@ -104,6 +104,21 @@ def fusable_decode(p, cfg) -> bool:
             and (cfg.d_head % 128 == 0 or INTERPRET))
 
 
+def decode_kernel_tier(p, cfg) -> str:
+    """Which decode-attention tier a kernel-routed step takes for layer
+    params ``p`` under ``cfg`` (mirrors the dispatch in
+    ``models/common.decode_attention[_paged]``): ``"kv8"`` — int8 KV
+    cache, kernels bypassed (the dequant-read path has no kernel tier);
+    ``"fused"`` — int8 projections through ``flash_decode_fused``;
+    ``"flash"`` — fp weights through ``flash_decode``.  Introspection
+    for engines/tests asserting what ``use_kernel=True`` actually
+    routes to — dequantized trees (interpret-mode serving) report
+    ``"flash"`` because ``fusable_decode`` is False for them."""
+    if cfg.kv_bits == 8:
+        return "kv8"
+    return "fused" if fusable_decode(p, cfg) else "flash"
+
+
 @functools.partial(jax.jit, static_argnames=("rope_theta", "use_rope",
                                              "block_s"))
 def flash_decode_fused(x: jax.Array, wq, wk, wv, wo, cache_k: jax.Array,

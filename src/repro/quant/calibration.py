@@ -159,6 +159,85 @@ def measure_beta(engine, methods: Optional[Sequence] = None,
     return record
 
 
+def measure_swap_cost(engine, methods: Optional[Sequence] = None,
+                      iters: int = 3, n_tokens: int = 2,
+                      prompt_len: int = 4, seed: int = 0) -> Dict[str, Any]:
+    """Measure the weight-swap latency between every pair of canonical
+    serving precisions on a real :class:`ServingEngine`.
+
+    A "swap" is what a split epoch pays between sub-batches: the engine
+    re-serves through ``params_for`` with a different precision's tree
+    from the multi-precision weight cache (plus the executable re-dispatch
+    against the other donated buffers).  For every ordered pair ``a -> b``
+    of distinct canonical bit specs the transition is timed INTERLEAVED
+    best-of-``iters`` against its own stay-at-``b`` control:
+
+        generate(a); T_swap = time(generate(b))     # swapped residency
+        generate(b); T_stay = time(generate(b))     # warm residency
+
+    ``swap_s = max(0, min T_swap - min T_stay)`` — back-to-back pairs
+    cancel machine-load drift, best-of cancels one-sided stalls, and the
+    stay control subtracts the cost of serving itself so only the
+    transition overhead remains.  Both executables and every precision's
+    cache entry are warmed off-clock first.  Methods sharing a canonical
+    spec (e.g. W8A16/W8A8 on interpret backends, where
+    ``_canon_bits`` folds (8, 8) -> 8) swap for free and get no pair.
+
+    Returns a JSON-able record consumed by
+    ``core.quantization.swap_seconds`` and the split descent
+    (``core.dftsp.dftsp_schedule_split``); ``default_s`` is the worst
+    measured pair, the fallback for unmeasured transitions.
+    """
+    from repro.core.quantization import METHODS
+    methods = list(METHODS.values()) if methods is None else list(methods)
+    canon = getattr(engine, "_canon_bits", lambda b: b)
+    rng = np.random.default_rng(seed)
+    nb = min(2, engine.batch_capacity)
+    prompts = [rng.integers(1, engine.cfg.vocab, size=prompt_len).tolist()
+               for _ in range(nb)]
+    caps = [n_tokens] * nb
+
+    by_key: Dict[str, Any] = {}
+    names: Dict[str, str] = {}
+    for m in methods:
+        key = str(canon(m.serve_bits))
+        names[m.name] = key
+        by_key.setdefault(key, m.serve_bits)
+
+    record: Dict[str, Any] = {"iters": int(iters),
+                              "backend": jax.default_backend(),
+                              "arch": engine.cfg.arch_id,
+                              "batch": nb, "n_tokens": int(n_tokens),
+                              "methods": names, "pairs": {},
+                              "default_s": 0.0}
+    # warm every precision's executable + weight-cache entry off-clock
+    for bits in by_key.values():
+        engine.generate(prompts, n_tokens=caps, quant_bits=bits)
+
+    def _timed(bits) -> float:
+        t0 = time.perf_counter()
+        engine.generate(prompts, n_tokens=caps, quant_bits=bits)
+        return time.perf_counter() - t0
+
+    keys = sorted(by_key)
+    for ka in keys:
+        for kb in keys:
+            if ka == kb:
+                continue
+            a, b = by_key[ka], by_key[kb]
+            t_swap = t_stay = float("inf")
+            for _ in range(iters):
+                engine.generate(prompts, n_tokens=caps, quant_bits=a)
+                t_swap = min(t_swap, _timed(b))
+                engine.generate(prompts, n_tokens=caps, quant_bits=b)
+                t_stay = min(t_stay, _timed(b))
+            swap_s = max(0.0, t_swap - t_stay)
+            record["pairs"][f"{ka}->{kb}"] = {
+                "swap_s": swap_s, "t_swap": t_swap, "t_stay": t_stay}
+            record["default_s"] = max(record["default_s"], swap_s)
+    return record
+
+
 def attach_alphas(record: Dict[str, Any], params: Any) -> Dict[str, Any]:
     """Add measured weight alphas (tree-bytes ratios) to a ``measure_beta``
     record in place, so the SAVED record fully determines the

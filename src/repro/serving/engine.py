@@ -166,13 +166,24 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any = None,
                  batch_capacity: int = 8, s_max: int = 512,
                  n_max: int = 128, quant_bits: int = 0,
-                 eos_id: int = 0, seed: int = 0):
+                 eos_id: int = 0, seed: int = 0,
+                 use_kernel: bool = False):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.batch_capacity = batch_capacity
         self.s_max = s_max
         self.n_max = n_max
         self.eos_id = eos_id
+        # route decode attention through the Pallas kernel tiers
+        # (flash_decode / flash_decode_fused when the served tree is
+        # fusable) instead of the XLA gather path; only the transformer
+        # families' decode steps accept the flag
+        if use_kernel and cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"use_kernel=True needs a transformer-family model "
+                f"(dense/moe/vlm), got family {cfg.family!r}")
+        self.use_kernel = bool(use_kernel)
+        self._decode_kw = {"use_kernel": True} if use_kernel else {}
         if params is None:
             params = self.model.init(jax.random.key(seed))
         self._raw_params = params            # full precision master copy
@@ -257,6 +268,19 @@ class ServingEngine:
             self._params_cache[bits] = p
         return self._params_cache[bits]
 
+    def decode_tier(self, bits=None) -> str:
+        """The Pallas decode-attention tier ``use_kernel=True`` serving
+        at ``bits`` (engine default when None) routes to — ``"kv8"`` /
+        ``"fused"`` / ``"flash"``, see ``kernels.ops.decode_kernel_tier``.
+        Interpret backends dequantize quantized trees at load, so they
+        report ``"flash"`` even for int8 methods."""
+        from repro.kernels import ops as kops
+        params = self.params_for(self.default_bits if bits is None
+                                 else bits)
+        layer = params.get("layers", params) if isinstance(params, dict) \
+            else params
+        return kops.decode_kernel_tier(layer, self.cfg)
+
     # -- compiled step functions --------------------------------------------
 
     def _prefill_fn(self, params, batch):
@@ -266,7 +290,8 @@ class ServingEngine:
         return cur, cache
 
     def _decode_fn(self, params, cache, tokens, pos):
-        return self.model.decode_step(params, cache, tokens, pos)
+        return self.model.decode_step(params, cache, tokens, pos,
+                                      **self._decode_kw)
 
     def _decode_loop_fn(self, params, cache, cur, caps):
         """The entire autoregressive stage as ONE ``lax.while_loop``.
@@ -297,7 +322,8 @@ class ServingEngine:
             lengths = lengths + alive.astype(jnp.int32)
             done = done | ((cur == self.eos_id) & alive)
             logits, cache = self.model.decode_step(
-                params, cache, cur[:, None], self.s_max + t)
+                params, cache, cur[:, None], self.s_max + t,
+                **self._decode_kw)
             cur = jnp.argmax(logits[..., :self.cfg.vocab],
                              -1).astype(jnp.int32)
             return cache, cur, out, lengths, done, t + 1
@@ -348,7 +374,8 @@ class ServingEngine:
             lengths = lengths + alive.astype(jnp.int32)
             done = done | ((cur == self.eos_id) & alive)
             logits, cache = self.model.decode_step(
-                params, cache, cur[:, None], self.s_max + t)
+                params, cache, cur[:, None], self.s_max + t,
+                **self._decode_kw)
             cur = jnp.argmax(logits[..., :self.cfg.vocab],
                              -1).astype(jnp.int32)
             return cache, cur, out, lengths, done, t + 1
@@ -431,7 +458,8 @@ class ServingEngine:
             lengths = lengths + alive.astype(jnp.int32)
             done = done | ((cur == self.eos_id) & alive)
             logits, pages = self.model.decode_step_paged(
-                params, pages, table, cur[:, None], self.s_max + t)
+                params, pages, table, cur[:, None], self.s_max + t,
+                **self._decode_kw)
             cur = jnp.argmax(logits[..., :self.cfg.vocab],
                              -1).astype(jnp.int32)
             return pages, cur, out, lengths, done, t + 1

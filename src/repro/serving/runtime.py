@@ -45,6 +45,7 @@ recorded in ``EpochTrace.quants``.  See DESIGN.md §2.1/§2.2.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -144,8 +145,22 @@ class EngineExecutor(Executor):
             spilled.extend(batch[cap:])
         if not spilled:
             return decision, []
+        # A split decision's sub-batch structure must survive the clamp:
+        # the flat batch is the concatenation of the sub-batches, so a
+        # prefix cut truncates from the LAST sub-batch backwards — kept
+        # rows stay in their decided-method group (an entry collapsing
+        # to one sub-batch drops back to the flat form; its method is
+        # already ``quants[mid]``, the primary).
+        splits = {}
+        for mid, subs in decision.splits.items():
+            kept = {r.rid for r in batches.get(mid, [])}
+            subs2 = [([r for r in b if r.rid in kept], q)
+                     for b, q in subs]
+            subs2 = [(b, q) for b, q in subs2 if b]
+            if len(subs2) > 1:
+                splits[mid] = subs2
         clamped = Decision(batches=batches, stats=decision.stats,
-                           quants=decision.quants)
+                           quants=decision.quants, splits=splits)
         # Feasibility is monotone under request removal for every shipped
         # policy, but the oracle is the contract — re-check, don't assume.
         if not policy.validate(env, clamped):
@@ -160,6 +175,22 @@ class EngineExecutor(Executor):
             if not batch:
                 continue
             engine = self.engines[mid]
+            subs = decision.splits.get(mid)
+            if subs:
+                # split epoch (DESIGN.md §1.1): each sub-batch executes
+                # back to back at its OWN method — the engine's
+                # multi-precision weight cache makes the inter-sub swap
+                # a dict lookup (its latency is charged by the control
+                # plane's swap-cost term, not re-measured here)
+                for sub, q in subs:
+                    if not sub:
+                        continue
+                    prompts, caps = engine.synth_prompts(sub, self.rng)
+                    result = engine.generate(
+                        prompts, caps,
+                        quant_bits=None if q is None else q.serve_bits)
+                    tokens += int(result.lengths.sum())
+                continue
             prompts, caps = engine.synth_prompts(batch, self.rng)
             q = decision.quants.get(mid)
             result = engine.generate(
@@ -298,9 +329,12 @@ class EpochRuntime:
                 m.wall_s += wall_s
                 for mid, batch in decision.batches.items():
                     if batch:
-                        name = quants[mid]
-                        m.served_by_method[name] = \
-                            m.served_by_method.get(name, 0) + len(batch)
+                        # per sub-batch: a split epoch serves one model
+                        # at MORE than one precision (identical to the
+                        # flat accounting for non-split decisions)
+                        for sub, q in decision.sub_batches(mid, self.env):
+                            m.served_by_method[q.name] = \
+                                m.served_by_method.get(q.name, 0) + len(sub)
                         m.served_by_model[mid] = \
                             m.served_by_model.get(mid, 0) + len(batch)
             m.traces.append(EpochTrace(
@@ -332,8 +366,21 @@ class ContinuousExecutor:
     mechanics; this base owns the slot bookkeeping shared by both.
     """
 
+    #: whether ``requant`` changes what the data plane actually SERVES
+    #: (precision/speed), not just the bookkeeping.  The analytic plane
+    #: emits k tokens per segment regardless of method, so flipping a
+    #: live cohort there cannot deliver the loosened admission bound the
+    #: oracle would price — the runtime's rising-edge requant skips
+    #: planes where the flip is serving-inert.
+    requant_effective = False
+
     def __init__(self):
         self._pools: Dict[Optional[str], dict] = {}
+        # rid -> the QuantMethod the request was DECIDED at when placed
+        # (split serving, DESIGN.md §1.1): per-row accounting and the
+        # engine executor's sub-batch grouping follow this, not just the
+        # pool-level cohort method
+        self._rid_method: Dict[int, QuantMethod] = {}
 
     # -- pool construction ---------------------------------------------------
 
@@ -360,7 +407,7 @@ class ContinuousExecutor:
         with."""
         pool = self._pools[mid]
         return list(pool["resident"].values()) \
-            + [r for _, r, _ in pool["pending"]]
+            + [r for _, r, _, _ in pool["pending"]]
 
     def free_slots(self, mid: Optional[str]) -> int:
         pool = self._pools[mid]
@@ -373,17 +420,25 @@ class ContinuousExecutor:
         return mid in self._pools and self.free_slots(mid) > 0
 
     def place(self, mid: Optional[str], r: Request,
-              resume: Optional[dict] = None) -> None:
+              resume: Optional[dict] = None,
+              quant: Optional[QuantMethod] = None) -> None:
         """Claim the lowest free slot for an admitted request; the refill
         executes at the start of the next ``step`` (engines batch all of
         a boundary's admissions into ONE prefill).  ``resume`` is the
         opaque payload a prior ``preempt`` of this request returned —
         the subclass restores the spilled progress when the refill
-        lands."""
+        lands.  ``quant`` is the method THIS request was decided at
+        (split serving): ``None`` means method-agnostic — the request
+        joins whatever the pool's cohort serves at — while a tagged
+        request only joins a matching-precision cohort (the engine
+        executor holds it until that sub-batch starts)."""
         pool = self._pools[mid]
-        taken = set(pool["resident"]) | {s for s, _, _ in pool["pending"]}
+        taken = set(pool["resident"]) \
+            | {s for s, _, _, _ in pool["pending"]}
         slot = min(s for s in range(pool["capacity"]) if s not in taken)
-        pool["pending"].append((slot, r, resume))
+        pool["pending"].append((slot, r, resume, quant))
+        if quant is not None:
+            self._rid_method[r.rid] = quant
 
     def evictable(self, mid: Optional[str]) -> List[Request]:
         """Rows preemption may evict: resident ON the data plane.
@@ -449,12 +504,49 @@ class ContinuousExecutor:
         deployment default)."""
         return self._pools[mid]["quant"]
 
-    def method_name(self, mid: Optional[str], env_r: EdgeEnv) -> str:
+    def decided_quant(self, rid: int,
+                      default: Optional[QuantMethod] = None
+                      ) -> Optional[QuantMethod]:
+        """The method request ``rid`` was decided at when placed (split
+        serving), else ``default`` — the runtime rebuilds per-model
+        sub-batch structure for its trial Decisions from this."""
+        return self._rid_method.get(rid, default)
+
+    def requant(self, mid: Optional[str],
+                method: Optional[QuantMethod]) -> None:
+        """Re-point pool ``mid``'s LIVE cohort at ``method`` mid-flight
+        (graceful degradation, DESIGN.md §2.4): the pool's method flips
+        and resident rows + pending refills are re-tagged so accounting
+        (``method_name``) and sub-batch grouping follow.  Subclasses
+        additionally swap the data plane's served precision."""
+        pool = self._pools[mid]
+        pool["quant"] = method
+        for r in pool["resident"].values():
+            self._rid_method[r.rid] = method
+        pool["pending"] = [(s, r, res, method)
+                           for s, r, res, _ in pool["pending"]]
+        for _, r, _, _ in pool["pending"]:
+            self._rid_method[r.rid] = method
+
+    def arena_blocked(self, mid: Optional[str], r: Request) -> bool:
+        """True when admitting ``r`` into ``mid`` is refused by the
+        node's PHYSICAL KV budget (the paged arena) even though the pool
+        has free slots — the case where preemption must look at OTHER
+        pools' residents, since any cohort's released pages free the
+        shared arena.  Data planes without a page pool are never
+        arena-blocked."""
+        return False
+
+    def method_name(self, mid: Optional[str], env_r: EdgeEnv,
+                    rid: Optional[int] = None) -> str:
         """Label for ``served_by_method`` accounting: the precision this
-        pool's cohort actually serves with — the per-cohort decided
-        method if one was set, else the env's deployed method (engine
-        subclasses may add engine-level overrides)."""
-        q = self._pools[mid]["quant"]
+        request actually served at — its OWN decided method when it was
+        placed with one (split cohorts serve rows at different methods),
+        else the pool's cohort method, else the env's deployed method
+        (engine subclasses may add engine-level overrides)."""
+        q = self._rid_method.get(rid) if rid is not None else None
+        if q is None:
+            q = self._pools[mid]["quant"]
         return q.name if q is not None else env_r.quant.name
 
     # -- token mechanics (subclass contract) ---------------------------------
@@ -501,7 +593,7 @@ class AnalyticContinuousExecutor(ContinuousExecutor):
     def step(self, env, k):
         finished, occupied, capacity = [], 0, 0
         for mid, pool in self._pools.items():
-            for slot, r, resume in pool["pending"]:
+            for slot, r, resume, _ in pool["pending"]:
                 pool["resident"][slot] = r
                 # a resumed request keeps its spilled progress: only the
                 # tokens it had NOT yet emitted remain to be served
@@ -527,7 +619,7 @@ class AnalyticContinuousExecutor(ContinuousExecutor):
     def evacuate(self, mid):
         pool = self._pools[mid]
         removed = list(pool["resident"].values()) \
-            + [r for _, r, _ in pool["pending"]]
+            + [r for _, r, _, _ in pool["pending"]]
         pool["resident"].clear()
         pool["remaining"].clear()
         pool["pending"].clear()
@@ -571,6 +663,11 @@ class EngineContinuousExecutor(ContinuousExecutor):
     whose beta/accuracy terms were never applied.
     """
 
+    # a mid-flight requant re-points the live DecodeState at another
+    # entry of the multi-precision weight cache: the very next segment
+    # really does serve at the new precision
+    requant_effective = True
+
     def __init__(self, engines, rng: Optional[np.random.Generator] = None,
                  seed: int = 0, quant_bits: Optional[int] = None,
                  collect_tokens: bool = False, arena=None):
@@ -613,8 +710,11 @@ class EngineContinuousExecutor(ContinuousExecutor):
     def tokens_per_epoch(self) -> int:
         return max(e.n_max for e in self.engines.values())
 
-    def method_name(self, mid, env_r: EdgeEnv) -> str:
-        q = self._pools[mid]["quant"]
+    def method_name(self, mid, env_r: EdgeEnv,
+                    rid: Optional[int] = None) -> str:
+        q = self._rid_method.get(rid) if rid is not None else None
+        if q is None:
+            q = self._pools[mid]["quant"]
         if q is not None:
             return q.name
         if self.quant_bits is None:
@@ -693,13 +793,29 @@ class EngineContinuousExecutor(ContinuousExecutor):
             return True     # fresh cohort: full n_max headroom of its own
         return self.node_headroom(mid) >= min(r.n, pool["engine"].n_max)
 
-    def place(self, mid, r, resume=None):
+    def arena_blocked(self, mid, r) -> bool:
+        """``accepts`` refused ``r`` on the shared PAGE budget while the
+        pool itself had room (free slot + headroom): the signal that
+        cross-pool preemption can help — evicting any cohort's resident
+        returns its pages to the node arena (DESIGN.md §2.3/§2.4)."""
+        pool = self._pools[mid]
+        if not pool.get("paged") or self.free_slots(mid) <= 0:
+            return False
+        if pool["state"] is not None and \
+                self.node_headroom(mid) < min(r.n, pool["engine"].n_max):
+            return False    # headroom-bound, not memory-bound
+        need = self._pages_needed(mid, r)
+        budget = self.arena.free_pages - self._pending_pages \
+            - self._outstanding_pages()
+        return budget < need
+
+    def place(self, mid, r, resume=None, quant=None):
         # reserve the candidate's cap-aware pages against this boundary
         # so a burst of same-boundary admissions can't jointly overdraw
         # the arena (the reservation becomes the row's initial lease +
         # top-up entitlement once the refill lands)
         self._pending_pages += self._pages_needed(mid, r)
-        super().place(mid, r, resume)
+        super().place(mid, r, resume, quant)
 
     def step(self, env, k):
         finished, occupied, capacity = [], 0, 0
@@ -713,10 +829,40 @@ class EngineContinuousExecutor(ContinuousExecutor):
         for mid, pool in self._pools.items():
             eng = pool["engine"]
             if pool["pending"]:
-                slots = [s for s, _, _ in pool["pending"]]
-                reqs = [r for _, r, _ in pool["pending"]]
+                # Split serving (DESIGN.md §1.1): a pending tagged with
+                # a decided method only joins a cohort serving at that
+                # method's canonical precision; untagged pendings are
+                # method-agnostic.  Non-matching pendings stay HELD —
+                # slots reserved — and form the next sub-batch, started
+                # at their own method once this cohort drains.
+                if pool["state"] is not None:
+                    target = eng._canon_bits(pool["state"].bits)
+                else:
+                    q0 = pool["pending"][0][3]
+                    if q0 is None:
+                        q0 = pool["quant"]
+                    elif pool["quant"] is None \
+                            or q0.name != pool["quant"].name:
+                        pool["quant"] = q0   # cohort accounting follows
+                    cb = self._cohort_bits(pool)
+                    target = eng.default_bits if cb is None \
+                        else eng._canon_bits(cb)
+                take, held = [], []
+                for item in pool["pending"]:
+                    q = item[3]
+                    if q is None \
+                            or eng._canon_bits(q.serve_bits) == target:
+                        take.append(item)
+                    else:
+                        held.append(item)
+                pool["pending"] = held
+            else:
+                take = []
+            if take:
+                slots = [s for s, _, _, _ in take]
+                reqs = [r for _, r, _, _ in take]
                 prompts, caps, prefixes = [], [], []
-                for slot, r, resume in pool["pending"]:
+                for slot, r, resume, _ in take:
                     if resume is None:
                         # same rng draw order as the historical batched
                         # synth call — fresh admissions are bit-stable
@@ -732,6 +878,7 @@ class EngineContinuousExecutor(ContinuousExecutor):
                         caps.append(min(r.n, eng.n_max))
                         prefixes.append(resume["prefix"])
                     pool["prompts"][slot] = prompts[-1]
+                ff = max((len(p) for p in prefixes if p), default=0)
                 if all(p is None for p in prefixes):
                     prefixes = None
                 if pool["state"] is None:
@@ -746,8 +893,25 @@ class EngineContinuousExecutor(ContinuousExecutor):
                         t_now=pool["t"], cap_max=clamps[mid],
                         prefixes=prefixes)
                 pool["resident"].update(zip(slots, reqs))
-                pool["pending"].clear()
-        self._pending_pages = 0     # reservations became real leases
+                if ff:
+                    # Eager resume replay: the forced-prefix steps
+                    # re-derive tokens the user ALREADY HAS, so they are
+                    # burned here at the admitting boundary instead of
+                    # consuming the segment grid's k-token budget — the
+                    # deadline gate judges a resume on its REMAINING
+                    # tokens (runtime._hopeless) and this is what makes
+                    # that promise true on the engine path.  Token
+                    # streams are unchanged (chunk-size invariance).
+                    pool["state"] = eng.generate_chunked(pool["state"],
+                                                         ff)
+                    pool["t"] = min(pool["t"] + ff, eng.n_max)
+        # landed reservations became real leases; re-reserve for pendings
+        # still HELD for a later sub-batch (conservatively at the pool's
+        # current cohort step)
+        self._pending_pages = sum(
+            self._pages_needed(mid, r)
+            for mid, pool in self._pools.items()
+            for _, r, _, _ in pool["pending"])
         for mid, pool in self._pools.items():
             eng = pool["engine"]
             occupied += len(pool["resident"])
@@ -792,6 +956,12 @@ class EngineContinuousExecutor(ContinuousExecutor):
         slot = next(s for s, r in pool["resident"].items() if r.rid == rid)
         out, lengths, done, t = eng.poll_chunked(pool["state"])
         prefix = [int(x) for x in out[slot][:lengths[slot]]]
+        # tokens this row still owes AFTER the replayed prefix — the
+        # deadline gate judges the resume on these, not the full n
+        # (the replay itself is burned off-grid at the resuming
+        # boundary; see the fast-forward in ``step``)
+        remaining = max(0, int(pool["state"].caps_host[slot])
+                        - len(prefix))
         pool["state"] = eng.evict_slots(pool["state"], [slot])
         del pool["resident"][slot]
         prompt = pool["prompts"].pop(slot)
@@ -799,13 +969,14 @@ class EngineContinuousExecutor(ContinuousExecutor):
             if pool["paged"]:
                 eng.release_all(pool["state"])
             pool["state"], pool["t"] = None, 0
-        return {"prompt": prompt, "prefix": prefix}
+        return {"prompt": prompt, "prefix": prefix,
+                "remaining": remaining}
 
     def evacuate(self, mid):
         pool = self._pools[mid]
         eng = pool["engine"]
         removed = list(pool["resident"].values()) \
-            + [r for _, r, _ in pool["pending"]]
+            + [r for _, r, _, _ in pool["pending"]]
         if pool["state"] is not None:
             eng.evict_slots(pool["state"], list(pool["resident"]))
             if pool["paged"]:
@@ -818,6 +989,24 @@ class EngineContinuousExecutor(ContinuousExecutor):
         # ``_pending_pages`` until the next successful step resets it —
         # conservatively strict admission, never an arena overdraw.
         return removed
+
+    def requant(self, mid, method):
+        """Mid-flight cohort requant (DESIGN.md §2.4): on top of the
+        base re-tagging, the LIVE decode state's ``bits`` are
+        re-canonicalized so the very next segment's ``params_for``
+        serves the re-scaled tree from the engine's multi-precision
+        weight cache — a dict lookup, not a requantization pass.
+        Historically degradation only re-selected methods for cohorts
+        STARTING while degraded; resident cohorts kept serving at the
+        pre-pressure method for their whole residency."""
+        super().requant(mid, method)
+        pool = self._pools[mid]
+        if pool["state"] is not None:
+            bits = method.serve_bits if method is not None \
+                else self.quant_bits
+            pool["state"] = dataclasses.replace(
+                pool["state"],
+                bits=pool["engine"]._canon_bits(bits))
 
     def topup_pages(self) -> int:
         return sum(getattr(e, "lease_topups", 0)
@@ -933,6 +1122,40 @@ class ContinuousRuntime(EpochRuntime):
 
     # -- admission: validate()-gated first-fit -------------------------------
 
+    @property
+    def _split_mode(self) -> bool:
+        return bool(getattr(self.policy, "split", False))
+
+    def _split_decision(self, batches: Dict[Optional[str], List[Request]],
+                        quants: Dict[Optional[str], QuantMethod],
+                        extra: Optional[Dict[int, QuantMethod]] = None
+                        ) -> Decision:
+        """Trial Decision for ``validate()``: under a split policy the
+        per-model sub-batch structure is rebuilt from each resident
+        row's DECIDED method (its placement tag, via
+        ``cexec.decided_quant``; ``extra`` maps candidate rids not yet
+        placed), so the oracle prices a mixed pool with the swap-aware
+        split check instead of flattening it onto one method — the
+        historical one-precision-per-cohort assumption this PR removes.
+        Non-split policies get the plain flat Decision unchanged."""
+        dec = Decision(batches=batches, quants=quants)
+        if not self._split_mode:
+            return dec
+        extra = extra or {}
+        for mid, batch in batches.items():
+            if len(batch) < 2:
+                continue
+            default = quants.get(mid)
+            groups: Dict[Optional[str], tuple] = {}
+            for r in batch:
+                q = extra[r.rid] if r.rid in extra \
+                    else self.cexec.decided_quant(r.rid, default)
+                key = q.name if q is not None else None
+                groups.setdefault(key, ([], q))[0].append(r)
+            if len(groups) > 1:
+                dec.splits[mid] = [(b, q) for b, q in groups.values()]
+        return dec
+
     def _assert_jointly_feasible(self, batches: Dict[Optional[str],
                                                      List[Request]],
                                  quants: Dict[Optional[str], QuantMethod]
@@ -951,8 +1174,11 @@ class ContinuousRuntime(EpochRuntime):
         if not isinstance(self.env, MultiLLMEnv):
             return
         order = getattr(self.policy, "order", "weight")
+        dec = self._split_decision(batches, quants)
         if not multi_feasible(self.env, batches, order=order,
-                              quants=quants):
+                              quants=quants, splits=dec.splits or None,
+                              swap_record=getattr(self.policy,
+                                                  "_swap_record", None)):
             raise InfeasibleDecisionError(
                 f"{self.policy.spec}: admission accepted a candidate "
                 f"whose joint resident batch fails multi_feasible — "
@@ -975,9 +1201,12 @@ class ContinuousRuntime(EpochRuntime):
         lone-compute bound ``still_viable`` drops on, this uses the
         runtime's own segment grid, so under overload EDF stops burning
         capacity on doomed tight-deadline work (the classic EDF overload
-        collapse).  A spilled analytic request is judged on its
-        REMAINING tokens; an engine resume replays its full prefix
-        through the forced-token path, so it is judged on the full n."""
+        collapse).  A spilled request — analytic OR engine — is judged
+        on its REMAINING tokens: both preempt payloads carry
+        ``"remaining"``, and the engine path burns the forced-prefix
+        replay off-grid at the resuming boundary (the fast-forward in
+        ``EngineContinuousExecutor.step``), so the remaining-token
+        judgment is honest, not optimistic."""
         n = r.n
         if rec is not None and "remaining" in rec.payload:
             n = rec.payload["remaining"]
@@ -998,6 +1227,136 @@ class ContinuousRuntime(EpochRuntime):
             env_r.model.arch_id,
             accuracies=[r.a for r in reqs] if reqs else None)
         return cands[0] if cands else None
+
+    def _requant_live(self, m: EpochMetrics, trace: EpochTrace,
+                      counting: bool,
+                      queue: Sequence[Request] = ()) -> None:
+        """Degradation RISING EDGE: re-select the serving method for
+        LIVE cohorts too, not just cohorts that start while degraded —
+        the historical gap left a mid-flight cohort serving at the
+        pre-pressure method for its whole residency, so a long cohort
+        admitted just before overload never degraded at all.  Each
+        non-quarantined pool with residents gets the fastest method
+        admissible for its resident batch AND the (post-shed) queued
+        work headed its way (``_degraded_quant``) — flipping below the
+        queue's accuracy demand would just trade overload for
+        accuracy-starvation, since refills whose floor exceeds the
+        cohort's method fail joint validation at every boundary until
+        the pool drains.  If the pick differs from the cohort's current
+        method and the oracle accepts the re-pointed joint batch, the
+        executor requants the cohort mid-flight (``cexec.requant`` — on
+        engines a multi-precision weight-cache lookup at the next
+        segment) with explicit accounting (``EpochMetrics.requanted``);
+        the pre-flip method is remembered for the falling-edge
+        restore.
+
+        Skipped entirely on serving-inert planes
+        (``cexec.requant_effective`` False, e.g. the analytic
+        executor): there a flip changes nothing the plane delivers
+        while still loosening the oracle's admission bound — pure
+        pricing optimism."""
+        cexec = self.cexec
+        if not cexec.requant_effective:
+            return
+        batches = {mm: cexec.resident(mm) for mm in cexec.pool_ids()}
+        quants = {mm: q for mm in cexec.pool_ids()
+                  if batches[mm] and (q := cexec.quant_of(mm)) is not None}
+        for mid in cexec.pool_ids():
+            if mid in self._quarantined or not batches[mid]:
+                continue
+            inbound = [r for r in queue
+                       if getattr(r, "model_id", None) == mid]
+            q = self._degraded_quant(mid, batches[mid] + inbound)
+            cur = cexec.quant_of(mid)
+            if q is None or (cur is not None and q.name == cur.name):
+                continue
+            trial = dict(quants)
+            trial[mid] = q
+            if not self.policy.validate(
+                    self.env,
+                    self._split_decision(
+                        batches, trial,
+                        extra={r.rid: q for r in batches[mid]})):
+                continue
+            self._requant_prior[mid] = (cur, q.name)
+            cexec.requant(mid, q)
+            quants = trial
+            trace.quants[mid] = q.name
+            if counting:
+                m.requanted += 1
+
+    def _requant_restore(self, m: EpochMetrics, trace: EpochTrace,
+                         counting: bool) -> None:
+        """Degradation FALLING edge: undo the rising-edge flips.  A
+        requanted cohort otherwise keeps its degraded (fast,
+        low-accuracy) method until its pool fully drains — and under
+        continuous refill a pool may never drain, so queued work whose
+        accuracy floor exceeds the degraded method's accuracy starves
+        long after the pressure cleared (it fails joint validation
+        against the cohort's method at every boundary).  Each pool
+        whose rising-edge flip is still in effect is re-pointed at its
+        pre-flip method under the same oracle gate; a pool that turned
+        over since, or whose restore fails validation, keeps its
+        current method — the next cohort start re-decides anyway."""
+        cexec = self.cexec
+        prior_map, self._requant_prior = self._requant_prior, {}
+        batches = {mm: cexec.resident(mm) for mm in cexec.pool_ids()}
+        quants = {mm: q for mm in cexec.pool_ids()
+                  if batches[mm] and (q := cexec.quant_of(mm)) is not None}
+        for mid, (prior, flipped) in prior_map.items():
+            if mid in self._quarantined or not batches.get(mid):
+                continue
+            cur = cexec.quant_of(mid)
+            if cur is None or cur.name != flipped:
+                continue                  # cohort turned over since
+            trial = dict(quants)
+            if prior is None:
+                trial.pop(mid, None)
+            else:
+                trial[mid] = prior
+            if not self.policy.validate(
+                    self.env,
+                    self._split_decision(
+                        batches, trial,
+                        extra={r.rid: prior for r in batches[mid]})):
+                continue
+            cexec.requant(mid, prior)
+            quants = trial
+            env_r = self.env.envs[mid] \
+                if isinstance(self.env, MultiLLMEnv) else self.env
+            trace.quants[mid] = prior.name if prior is not None \
+                else env_r.quant.name
+            if counting:
+                m.requanted += 1
+
+    def _auto_calibrate(self) -> None:
+        """Run-start warmup calibration (engine data planes only): a
+        policy declaring ``calib="measured"`` with nothing installed
+        gets a quick ``measure_beta`` pass on the hosted engine(s) —
+        measured betas + measured weight-residency alphas
+        (``attach_alphas``) — and a split policy with no swap record
+        gets ``measure_swap_cost``, so ``dftsp:quant=auto,split=true``
+        drives the continuous engine path with MEASURED coefficients
+        out of the box instead of raising at the first descent."""
+        engines = getattr(self.cexec, "engines", None)
+        if not engines:
+            return
+        eng = next(iter(engines.values()))
+        policy = self.policy
+        if getattr(policy, "calib", None) == "measured" \
+                and getattr(policy, "_measured", None) is None:
+            from repro.quant.calibration import (attach_alphas,
+                                                 measure_beta,
+                                                 measured_methods)
+            record = measure_beta(
+                eng, batches=(1, min(4, eng.batch_capacity)), iters=1,
+                n_tokens=4, prompt_len=4)
+            attach_alphas(record, eng._raw_params)
+            policy.install_measured(measured_methods(record))
+        if getattr(policy, "split", False) \
+                and getattr(policy, "_swap_record", None) is None:
+            from repro.quant.calibration import measure_swap_cost
+            policy.install_swap_costs(measure_swap_cost(eng, iters=1))
 
     def _try_admit(self, queue: List[Request], trace: EpochTrace,
                    degraded: bool = False) -> List[Request]:
@@ -1054,15 +1413,37 @@ class ContinuousRuntime(EpochRuntime):
             trial = dict(quants)
             if q is not None:
                 trial[mid] = q
-            if self.policy.validate(self.env, Decision(batches=batches,
-                                                       quants=trial)):
+            ok = self.policy.validate(
+                self.env, self._split_decision(batches, trial,
+                                               extra={r.rid: q}))
+            if not ok and self._split_mode and not degraded:
+                # SPLIT fallback (DESIGN.md §1.1): the candidate is
+                # infeasible at the cohort's method — re-decide a method
+                # for it ALONE and try it as its own sub-batch (the
+                # executor holds it until the live sub-batch drains, so
+                # differently-quantized rows serve back to back with
+                # the swap cost priced by the split oracle)
+                q2 = self.policy.select_quant(self.env, mid, [r])
+                if q2 is not None and (q is None or q2.name != q.name):
+                    trial2 = dict(quants)
+                    if starting:
+                        trial2[mid] = q2   # fresh cohort: start AT q2
+                    elif q is not None:
+                        trial2[mid] = q    # primary stays the cohort's
+                    if self.policy.validate(
+                            self.env,
+                            self._split_decision(batches, trial2,
+                                                 extra={r.rid: q2})):
+                        ok, q, trial = True, q2, trial2
+            if ok:
                 if starting:
                     cexec.set_quant(mid, q)
                     if q is not None:
                         trace.quants[mid] = q.name
                 quants = trial
                 cexec.place(mid, r,
-                            resume=rec.payload if rec is not None else None)
+                            resume=rec.payload if rec is not None else None,
+                            quant=q if self._split_mode else None)
                 admitted.append(r)
             else:
                 batches[mid].pop()
@@ -1075,14 +1456,24 @@ class ContinuousRuntime(EpochRuntime):
                      ) -> Tuple[List[Request], List[Request]]:
         """Priority preemption at a segment boundary (DESIGN.md §2.4).
 
-        For each still-queued candidate (in admission order) whose pool
-        is slot-bound, find a resident victim the candidate strictly
-        beats (``pick_victim``: higher priority class, or same class
-        with an earlier deadline), check the policy oracle still holds
-        on the swapped batch, then evict the victim — spilling its
-        progress into a :class:`SpillRecord` — and admit the candidate
-        into the freed slot.  Victims re-enter the queue and resume
-        later via their spill payload; a victim already evicted
+        For each still-queued candidate (in admission order) whose
+        admission is BOUND — its pool out of slots, or the shared KV
+        arena refusing its pages (``arena_blocked``) — find a resident
+        victim the candidate strictly beats (``pick_victim``: higher
+        priority class, or same class with an earlier deadline), check
+        the policy oracle still holds on the swapped batch, then evict
+        the victim — spilling its progress into a :class:`SpillRecord`
+        — and admit the candidate into the freed capacity.  When the
+        pool is slot-bound, victims come from the candidate's own pool
+        (a freed slot elsewhere is useless); when the ARENA binds,
+        victims come from EVERY healthy pool — any cohort's released
+        pages free the shared node budget, the cross-model eviction the
+        historical intra-pool-only rule could not express (a
+        high-priority admission was shed despite evictable low-priority
+        pages in another cohort).  Eviction repeats until the candidate
+        fits or no admissible victim remains (bounded: residents
+        strictly shrink).  Victims re-enter the queue and resume later
+        via their spill payload; a victim already evicted
         ``max_preemptions`` times is pinned (never evicted again), and
         each eviction pushes the victim's earliest re-admission out by
         ``backoff_boundaries × attempts`` segment boundaries.
@@ -1106,43 +1497,49 @@ class ContinuousRuntime(EpochRuntime):
                 continue           # candidate itself is backing off
             if self.deadline_gated and self._hopeless(r, rec):
                 continue           # not worth evicting anyone for
-            if cexec.free_slots(mid) > 0:
-                continue           # not slot-bound; admission had its shot
-            eligible = [v for v in cexec.evictable(mid)
-                        if (self._spills[v.rid].attempts
-                            if v.rid in self._spills else 0)
-                        < self.max_preemptions]
-            victim = pick_victim(eligible, r)
-            if victim is None:
-                continue
-            trial = [x for x in batches[mid] if x.rid != victim.rid] + [r]
-            trial_batches = dict(batches)
-            trial_batches[mid] = trial
-            if not self.policy.validate(
-                    self.env, Decision(batches=trial_batches,
-                                       quants=quants)):
-                continue
-            payload = cexec.preempt(mid, victim.rid)
-            prev = self._spills.get(victim.rid)
-            attempts = prev.attempts + 1 if prev is not None else 1
-            self._spills[victim.rid] = SpillRecord(
-                request=victim, payload=payload, attempts=attempts,
-                not_before=self._boundary
-                + self.backoff_boundaries * attempts)
-            requeued.append(victim)
-            trace.preempted_rids.append(victim.rid)
-            if counting:
-                m.preempted += 1
-            changed = True
-            if cexec.accepts(mid, r):
-                cexec.place(mid, r,
-                            resume=rec.payload if rec is not None
-                            else None)
-                admitted.append(r)
-                batches[mid] = trial
-            else:
-                batches[mid] = [x for x in batches[mid]
-                                if x.rid != victim.rid]
+            slot_bound = cexec.free_slots(mid) <= 0
+            if not slot_bound and not cexec.arena_blocked(mid, r):
+                continue           # not bound; admission had its shot
+            vpools = [mid] if slot_bound else \
+                [p for p in cexec.pool_ids() if p not in self._quarantined]
+            while True:
+                eligible = [v for p in vpools for v in cexec.evictable(p)
+                            if (self._spills[v.rid].attempts
+                                if v.rid in self._spills else 0)
+                            < self.max_preemptions]
+                victim = pick_victim(eligible, r)
+                if victim is None:
+                    break
+                vmid = victim.model_id
+                trial_batches = dict(batches)
+                trial_batches[vmid] = [x for x in batches[vmid]
+                                       if x.rid != victim.rid]
+                trial_batches[mid] = trial_batches[mid] + [r]
+                if not self.policy.validate(
+                        self.env,
+                        self._split_decision(trial_batches, quants)):
+                    break
+                payload = cexec.preempt(vmid, victim.rid)
+                prev = self._spills.get(victim.rid)
+                attempts = prev.attempts + 1 if prev is not None else 1
+                self._spills[victim.rid] = SpillRecord(
+                    request=victim, payload=payload, attempts=attempts,
+                    not_before=self._boundary
+                    + self.backoff_boundaries * attempts)
+                requeued.append(victim)
+                trace.preempted_rids.append(victim.rid)
+                if counting:
+                    m.preempted += 1
+                changed = True
+                batches[vmid] = [x for x in batches[vmid]
+                                 if x.rid != victim.rid]
+                if cexec.accepts(mid, r):
+                    cexec.place(mid, r,
+                                resume=rec.payload if rec is not None
+                                else None)
+                    admitted.append(r)
+                    batches[mid] = batches[mid] + [r]
+                    break
         if changed:
             self._assert_jointly_feasible(batches, quants)
         return admitted, requeued
@@ -1245,7 +1642,8 @@ class ContinuousRuntime(EpochRuntime):
                 m.generated_tokens += tokens
                 m.served_by_model[mid] = \
                     m.served_by_model.get(mid, 0) + 1
-                name = self.cexec.method_name(mid, self._env_for(r))
+                name = self.cexec.method_name(mid, self._env_for(r),
+                                              rid=r.rid)
                 m.served_by_method[name] = \
                     m.served_by_method.get(name, 0) + 1
             if now is None:
@@ -1281,6 +1679,7 @@ class ContinuousRuntime(EpochRuntime):
         n_seg = self.segments_per_epoch
         dt = T_E / n_seg
         self.cexec.bind(self.env)
+        self._auto_calibrate()
         self._topup0 = self.cexec.topup_pages()   # engines may be reused
         m = EpochMetrics(n_epochs=n_epochs, T_E=T_E)
         queue: List[Request] = []
@@ -1292,6 +1691,8 @@ class ContinuousRuntime(EpochRuntime):
         self._boundary = 0              # global segment-boundary index
         self._first_token: Dict[int, float] = {}
         self._tnow = 0.0                # current boundary's segment start
+        self._was_degraded = False      # degradation edge detector
+        self._requant_prior = {}        # mid -> (pre-flip method, name)
         now = 0.0
 
         for e in range(n_epochs + warmup_epochs):
@@ -1328,6 +1729,16 @@ class ContinuousRuntime(EpochRuntime):
                             m.degraded_segments += 1
                         queue = self._shed_queue(queue, m, trace,
                                                  counting)
+                        if not self._was_degraded:
+                            # rising edge: LIVE cohorts degrade too,
+                            # not just the ones that start from now on
+                            self._requant_live(m, trace, counting,
+                                               queue)
+                    elif self._was_degraded and self._requant_prior:
+                        # falling edge: restore the pre-flip methods so
+                        # high-accuracy queued work stops starving
+                        self._requant_restore(m, trace, counting)
+                    self._was_degraded = degraded
 
                 admitted = self._try_admit(queue, trace, degraded)
                 if self.preemption:

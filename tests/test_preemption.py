@@ -17,11 +17,13 @@ import pytest
 
 from conftest import reduced_cfg
 from repro.core.environment import paper_env
-from repro.core.request import RequestGenerator
+from repro.core.multi import MultiLLMEnv
+from repro.core.request import Request, RequestGenerator
 from repro.serving.kv_arena import KVArena
 from repro.serving.runtime import (AnalyticContinuousExecutor,
                                    ContinuousRuntime,
                                    EngineContinuousExecutor)
+from repro.serving.slo import SpillRecord
 
 ENV = paper_env("bloom-3b", "W8A16")
 
@@ -143,6 +145,107 @@ def test_analytic_runtime_preempts_with_spill_accounting():
     assert m.preempted > 0
     # a resume is only counted when the preempted rid actually re-lands
     assert 0 <= m.resumed <= m.preempted + m.served
+
+
+def _req(rid=0, s=4, n=8, tau=30.0, priority=0):
+    return Request(rid=rid, s=s, n=n, tau=tau, a=0.5, h=1e-3,
+                   arrival=0.0, priority=priority)
+
+
+def test_engine_preempt_payload_reports_remaining(eng):
+    """Regression: the engine preempt payload historically carried only
+    (prompt, prefix), so the deadline gate re-judged a spilled request
+    on its FULL n — a half-served long request looked hopeless even
+    when its remaining half met the deadline.  Both payloads now carry
+    ``remaining``."""
+    cexec = EngineContinuousExecutor(eng, seed=0)
+    cexec.bind(ENV)
+    r = _req()
+    cexec.place(None, r)
+    cexec.step(ENV, 3)
+    payload = cexec.preempt(None, r.rid)
+    assert 0 < len(payload["prefix"]) < 8
+    assert payload["remaining"] == 8 - len(payload["prefix"])
+
+
+def test_hopeless_judges_spilled_requests_on_remaining_tokens():
+    rt = ContinuousRuntime(ENV, "dftsp",
+                           AnalyticContinuousExecutor(capacity=4), k=4,
+                           deadline_gated=True)
+    rt._tnow = 0.0
+    dt = rt.T_E / rt.segments_per_epoch
+    r = _req(n=64, tau=4.5 * dt)
+    assert rt._hopeless(r, None)          # 16 segments from scratch
+    rec = SpillRecord(request=r, payload={"remaining": 8})
+    assert not rt._hopeless(r, rec)       # 2 segments left: feasible
+    rec = SpillRecord(request=r, payload={"remaining": 60})
+    assert rt._hopeless(r, rec)
+
+
+# -- cross-pool preemption under shared-arena pressure (DESIGN.md §2.3/2.4) --
+
+
+MENV = MultiLLMEnv.host({
+    "bloom-3b": paper_env("bloom-3b", "W8A16"),
+    "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+})
+
+
+def _two_pool_cexec(**kw):
+    from repro.serving.engine import ServingEngine
+    ea = ServingEngine(reduced_cfg("bloom-3b"), batch_capacity=2,
+                       s_max=16, n_max=8, eos_id=-1)
+    eb = ServingEngine(reduced_cfg("bloom-7b1"), batch_capacity=2,
+                       s_max=16, n_max=8, eos_id=-1)
+    arena = KVArena.for_engines([ea, eb], block_tokens=8, shrink=0.5)
+    return EngineContinuousExecutor({"bloom-3b": ea, "bloom-7b1": eb},
+                                    seed=0, arena=arena, **kw), arena
+
+
+def test_arena_blocked_flags_cross_pool_memory_pressure():
+    """Regression: preemption historically searched victims only in the
+    CANDIDATE's pool, but when the shared arena binds, any cohort's
+    freed pages help — ``arena_blocked`` is the signal that widens the
+    victim search, and evicting another pool's resident must actually
+    unblock the admission."""
+    cexec, arena = _two_pool_cexec()
+    cexec.bind(MENV)
+    residents = [_req(rid=10 + i) for i in range(2)]
+    for r in residents:
+        assert cexec.accepts("bloom-7b1", r)
+        cexec.place("bloom-7b1", r)
+    cexec.step(MENV, 1)
+    rc = _req(rid=0, priority=1)
+    assert cexec.free_slots("bloom-3b") > 0
+    assert not cexec.accepts("bloom-3b", rc)      # page budget refuses
+    assert cexec.arena_blocked("bloom-3b", rc)    # ...and says why
+    # evicting the OTHER pool's resident returns its pages to the node
+    payload = cexec.preempt("bloom-7b1", residents[0].rid)
+    assert payload["remaining"] > 0
+    assert cexec.accepts("bloom-3b", rc)
+    assert not cexec.arena_blocked("bloom-3b", rc)
+
+
+def test_cross_pool_preemption_run_conserves():
+    cexec, _ = _two_pool_cexec(collect_tokens=True)
+
+    def tagger(arrivals):
+        for i, r in enumerate(arrivals):
+            r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+        return arrivals
+
+    rt = ContinuousRuntime(MENV, "multi-dftsp", cexec, k=2,
+                           preemption=True, max_preemptions=2,
+                           backoff_boundaries=1)
+    m = rt.run(gen=RequestGenerator(rate=10, seed=3, lengths=(4, 8),
+                                    tau_range=(0.5, 8.0),
+                                    priorities=(0, 1, 2)),
+               n_epochs=4, warmup_epochs=0, tag_arrivals=tagger)
+    conserved(m)
+    assert m.served > 0
+    served = [rid for t in m.traces for rid in t.finished_rids]
+    assert len(served) == len(set(served)) == m.served
+    assert sorted(cexec.outputs) == sorted(served)
 
 
 def test_preemption_respects_attempt_cap():

@@ -1,0 +1,355 @@
+"""Per-batch quantization splits (DESIGN.md §1.1): the (z, method) split
+descent, its measured weight-swap pricing, the split-aware policy
+oracles, and split serving through BOTH runtimes.
+
+The load-bearing inequality: a descent that includes every no-split
+candidate can never schedule FEWER requests than the best single-method
+schedule on the same queue — at any swap cost.  The committed
+``experiments/benchmarks/quant_splits.json`` artifact pins the strict
+win (>= 1.1x on at least one paper queue) from JSON alone, no
+re-timing, exactly like the calibration-flip pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.dftsp import dftsp_schedule, dftsp_schedule_split
+from repro.core.environment import paper_env
+from repro.core.multi import MultiLLMEnv
+from repro.core.policy import Decision, get_policy
+from repro.core.quantization import METHODS, swap_seconds
+from repro.core.request import RequestGenerator
+from repro.serving.runtime import (AnalyticContinuousExecutor,
+                                   ContinuousRuntime, EngineContinuousExecutor,
+                                   EngineExecutor, EpochRuntime)
+
+ENV = paper_env("bloom-3b", "W8A16")
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "benchmarks", "quant_splits.json")
+
+
+@pytest.fixture(scope="module")
+def eng():
+    from repro.serving.engine import ServingEngine
+    return ServingEngine(reduced_cfg("bloom-3b"), batch_capacity=3,
+                         s_max=16, n_max=8, eos_id=-1)
+
+
+def _queue(seed, rate=25.0, horizon=2.0):
+    return RequestGenerator(rate=rate, seed=seed).within(0.0, horizon)
+
+
+def _best_single(env, queue):
+    return max(len(dftsp_schedule(env, queue, quant=m)[0])
+               for m in METHODS.values())
+
+
+def _flat_record(swap_s):
+    """Synthetic swap record: every method canonicalizes by weight bits
+    (W8A8/W8A16 share int8 residency and swap free), every cross-canon
+    transition costs ``swap_s``."""
+    return {"methods": {n: str(m.weight_bits) for n, m in METHODS.items()},
+            "pairs": {}, "default_s": float(swap_s)}
+
+
+def conserved(m):
+    assert m.arrived == m.served + m.dropped + m.shed \
+        + len(m.final_queue_rids) + len(m.in_flight_rids), \
+        (m.arrived, m.served, m.dropped, m.shed,
+         len(m.final_queue_rids), len(m.in_flight_rids))
+
+
+# -- the descent -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_split_never_loses_to_best_single(seed):
+    queue = _queue(seed)
+    single = _best_single(ENV, queue)
+    for record in (None, _flat_record(0.01), _flat_record(10.0)):
+        subs, _ = dftsp_schedule_split(ENV, queue, swap_record=record)
+        assert sum(len(b) for b, _ in subs) >= single, (seed, record)
+
+
+def test_split_strictly_wins_on_mixed_accuracy_queue():
+    """Paper queue seed 0: the tight-accuracy tail rides its own W8A16
+    sub-batch while the bulk serves at W8A8 — more requests than ANY
+    single method admits."""
+    queue = _queue(0)
+    subs, _ = dftsp_schedule_split(ENV, queue)
+    assert sum(len(b) for b, _ in subs) > _best_single(ENV, queue)
+    assert len(subs) == 2
+    assert len({m.name for _, m in subs}) == 2
+
+
+def test_swap_cost_is_charged_and_prunes_cross_canon_splits():
+    # seed 2's free split pairs W8A8 with W16A16 — a cross-canon swap
+    queue = _queue(2)
+    free, _ = dftsp_schedule_split(ENV, queue)
+    assert len({str(m.weight_bits) for _, m in free}) == 2
+    # a prohibitive measured swap kills every cross-canon split; the
+    # descent still never drops below the best single method
+    subs, _ = dftsp_schedule_split(ENV, queue,
+                                   swap_record=_flat_record(1e3))
+    assert len({str(m.weight_bits) for _, m in subs}) == 1
+    total = sum(len(b) for b, _ in subs)
+    assert _best_single(ENV, queue) <= total \
+        <= sum(len(b) for b, _ in free)
+
+
+def test_swap_seconds_lookup_contract():
+    rec = _flat_record(5.0)
+    assert swap_seconds(rec, METHODS["W8A8"], METHODS["W8A16"]) == 0.0
+    assert swap_seconds(rec, METHODS["W8A8"], METHODS["W16A16"]) == 5.0
+    assert swap_seconds(None, METHODS["W8A8"], METHODS["W16A16"]) == 0.0
+
+
+# -- policy surface ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["dftsp:quant=auto,split=true",
+                                  "multi-dftsp:quant=auto,split=true",
+                                  "dftsp:calib=measured,quant=auto,"
+                                  "split=true"])
+def test_split_spec_roundtrip(spec):
+    assert get_policy(spec).spec == spec
+    assert get_policy(get_policy(spec).spec).spec == spec
+
+
+def test_split_decision_contract_and_oracle():
+    p = get_policy("dftsp:quant=auto,split=true")
+    dec = p.schedule(ENV, _queue(0))
+    subs = dec.splits[None]
+    assert len(subs) == 2
+    # the flat batch is ALWAYS the concatenation of the sub-batches
+    assert [r.rid for r in dec.batches[None]] == \
+        [r.rid for b, _ in subs for r in b]
+    # quants records the PRIMARY (first) sub-batch's method
+    assert dec.quants[None].name == subs[0][1].name
+    assert p.validate(ENV, dec)
+
+
+def test_split_oracle_rejects_overfilled_sub_batch():
+    p = get_policy("dftsp:quant=auto,split=true")
+    dec = p.schedule(ENV, _queue(0))
+    queue = _queue(0)
+    extra = [r for r in queue
+             if r.rid not in {x.rid for x in dec.batches[None]}]
+    sub0, q0 = dec.splits[None][0]
+    bad_sub = sub0 + extra
+    bad = Decision(batches={None: bad_sub + dec.splits[None][1][0]},
+                   quants=dict(dec.quants),
+                   splits={None: [(bad_sub, q0), dec.splits[None][1]]})
+    assert not p.validate(ENV, bad)
+
+
+# -- epoch path: EngineExecutor serves splits sub-batch by sub-batch ---------
+
+
+def test_engine_executor_admit_clamps_splits():
+    p = get_policy("dftsp:quant=auto,split=true")
+    dec = p.schedule(ENV, _queue(0))
+    n0 = len(dec.splits[None][0][0])
+    # clamp INSIDE the first sub-batch: the split collapses to one sub
+    # and drops back to the flat form
+    ex = EngineExecutor({None: SimpleNamespace(batch_capacity=n0 - 1)})
+    clamped, spilled = ex.admit(ENV, p, dec)
+    assert clamped.splits == {}
+    assert len(clamped.batches[None]) == n0 - 1
+    # clamp INSIDE the second sub-batch: both subs survive, truncated
+    # from the back, and the flat batch stays the concatenation
+    ex = EngineExecutor({None: SimpleNamespace(batch_capacity=n0 + 1)})
+    clamped, spilled = ex.admit(ENV, p, dec)
+    subs = clamped.splits[None]
+    assert [len(b) for b, _ in subs] == [n0, 1]
+    assert [r.rid for r in clamped.batches[None]] == \
+        [r.rid for b, _ in subs for r in b]
+    assert len(spilled) == len(dec.batches[None]) - (n0 + 1)
+
+
+def test_engine_executor_executes_each_sub_at_its_own_method(eng):
+    reqs = _queue(0)[:3]
+    for r in reqs:
+        r.n = 4
+    dec = Decision(batches={None: list(reqs)},
+                   quants={None: METHODS["W8A8"]},
+                   splits={None: [(list(reqs[:2]), METHODS["W8A8"]),
+                                  ([reqs[2]], METHODS["W16A16"])]})
+    ex = EngineExecutor({None: eng}, seed=0)
+    tokens = ex.execute(ENV, dec)
+    # eos_id=-1: every row runs to its cap, so the split epoch generated
+    # exactly the flat batch's token budget across both sub-batches
+    assert tokens == sum(min(r.n, eng.n_max) for r in reqs)
+
+
+def test_epoch_runtime_split_accounting_spans_methods(eng):
+    rt = EpochRuntime(ENV, "dftsp:quant=auto,split=true",
+                      EngineExecutor({None: eng}, seed=0))
+    m = rt.run(rate=25, n_epochs=3, seed=0, warmup_epochs=0)
+    conserved(m)
+    assert m.served > 0
+    # served_by_method follows the per-sub methods and stays conservative
+    assert sum(m.served_by_method.values()) == m.served
+
+
+# -- continuous path: split cohorts on both data planes ----------------------
+
+
+def test_continuous_split_conservation_analytic():
+    rt = ContinuousRuntime(ENV, "dftsp:quant=auto,split=true",
+                           AnalyticContinuousExecutor(capacity=4), k=64)
+    m = rt.run(gen=RequestGenerator(rate=20, seed=0), n_epochs=4,
+               warmup_epochs=0)
+    conserved(m)
+    assert m.served > 0
+    assert sum(m.served_by_method.values()) == m.served
+
+
+def test_continuous_split_conservation_engine(eng):
+    cexec = EngineContinuousExecutor(eng, seed=0, collect_tokens=True)
+    rt = ContinuousRuntime(ENV, "dftsp:quant=auto,split=true", cexec, k=2)
+    m = rt.run(gen=RequestGenerator(rate=8, seed=3, lengths=(4, 8)),
+               n_epochs=4, warmup_epochs=0)
+    conserved(m)
+    assert m.served > 0
+    served = [rid for t in m.traces for rid in t.finished_rids]
+    assert len(served) == len(set(served)) == m.served
+    assert sorted(cexec.outputs) == sorted(served)
+
+
+def test_continuous_split_conservation_multi():
+    menv = MultiLLMEnv.host({
+        "bloom-3b": paper_env("bloom-3b", "W8A16"),
+        "bloom-7b1": paper_env("bloom-7b1", "W8A16"),
+    })
+
+    def tagger(arrivals):
+        for i, r in enumerate(arrivals):
+            r.model_id = "bloom-3b" if i % 2 == 0 else "bloom-7b1"
+        return arrivals
+
+    rt = ContinuousRuntime(menv, "multi-dftsp:quant=auto,split=true",
+                           AnalyticContinuousExecutor(capacity=4), k=64)
+    m = rt.run(gen=RequestGenerator(rate=12, seed=1), n_epochs=4,
+               warmup_epochs=0, tag_arrivals=tagger)
+    conserved(m)
+    assert m.served > 0
+
+
+def test_auto_calibrate_installs_measured_and_swap_records(eng):
+    """Run-start warmup calibration on the engine data plane: a
+    ``calib=measured`` split policy with nothing installed measures
+    betas/alphas AND the swap record before the first admission."""
+    p = get_policy("dftsp:calib=measured,quant=auto,split=true")
+    assert p._measured is None and p._swap_record is None
+    rt = ContinuousRuntime(ENV, p, EngineContinuousExecutor(eng, seed=0),
+                           k=2)
+    m = rt.run(gen=RequestGenerator(rate=4, seed=0, lengths=(4, 8)),
+               n_epochs=2, warmup_epochs=0)
+    conserved(m)
+    assert p._measured is not None and set(p._measured) == set(METHODS)
+    assert p._swap_record is not None and "pairs" in p._swap_record
+
+
+# -- engine kernel routing (the use_kernel serving gap) ----------------------
+
+
+def test_use_kernel_tokens_bit_identical(eng):
+    from repro.serving.engine import ServingEngine
+    ek = ServingEngine(reduced_cfg("bloom-3b"), batch_capacity=3,
+                       s_max=16, n_max=8, eos_id=-1, use_kernel=True)
+    prompts = [[3, 5, 7, 2], [1, 2], [9, 4, 6]]
+    a = eng.generate(prompts, n_tokens=[8, 8, 8])
+    b = ek.generate(prompts, n_tokens=[8, 8, 8])
+    assert np.array_equal(a.tokens, b.tokens)
+    assert np.array_equal(a.lengths, b.lengths)
+    # chunked path too
+    sa = eng.start_chunked(prompts, [8, 8, 8])
+    sb = ek.start_chunked(prompts, [8, 8, 8])
+    sa = eng.generate_chunked(sa, 8)
+    sb = ek.generate_chunked(sb, 8)
+    oa = eng.poll_chunked(sa)[0]
+    ob = ek.poll_chunked(sb)[0]
+    assert np.array_equal(oa, ob)
+
+
+def test_use_kernel_rejects_non_transformer_families():
+    from repro.serving.engine import ServingEngine
+    with pytest.raises(ValueError):
+        ServingEngine(reduced_cfg("xlstm-1.3b"), batch_capacity=2,
+                      s_max=8, n_max=4, use_kernel=True)
+
+
+def test_decode_tier_introspection(eng):
+    # interpret-mode serving dequantizes weight-quant trees at load, so
+    # every tier reports the unfused flash kernel on CPU; an int8 KV
+    # deployment bypasses kernels entirely
+    assert eng.decode_tier() in ("flash", "fused")
+    from repro.kernels import ops as kops
+    cfg8 = dataclasses.replace(eng.cfg, kv_bits=8)
+    params = eng.params_for(eng.default_bits)
+    layer = params.get("layers", params)
+    assert kops.decode_kernel_tier(layer, cfg8) == "kv8"
+
+
+# -- the committed artifact pin ----------------------------------------------
+
+
+def test_pinned_quant_splits_artifact():
+    """Re-derive every decision in the committed benchmark artifact from
+    its saved swap record — no re-timing — and re-check the gates."""
+    with open(ARTIFACT) as f:
+        art = json.load(f)
+    meta, header = art["meta"], art["header"]
+    env = paper_env(meta["arch"], "W8A16")
+    record = meta["record"]
+    qmeta = meta["queue"]
+    ratios = []
+    for row in art["rows"]:
+        row = dict(zip(header, row))
+        queue = RequestGenerator(rate=qmeta["rate"],
+                                 seed=row["queue_seed"]).within(
+            0.0, qmeta["horizon"])
+        assert len(queue) == row["n_queue"]
+        assert _best_single(env, queue) == row["single_batch"]
+        subs, _ = dftsp_schedule_split(env, queue, swap_record=record)
+        assert sum(len(b) for b, _ in subs) == row["split_measured"]
+        ratios.append(row["ratio"])
+    gate = meta["gate"]
+    assert all(r >= gate["floor"] for r in ratios)
+    assert any(r >= gate["win"] for r in ratios)
+
+
+# -- hypothesis property (CI installs hypothesis; local runs skip) -----------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), rate=st.floats(5.0, 40.0),
+           swap_s=st.floats(0.0, 20.0))
+    def test_split_dominates_best_single_property(seed, rate, swap_s):
+        """At ANY swap cost, the split descent never schedules fewer
+        requests than the best single-method schedule — the no-split
+        candidates are part of its search space."""
+        queue = _queue(seed, rate=rate)
+        subs, _ = dftsp_schedule_split(ENV, queue,
+                                       swap_record=_flat_record(swap_s))
+        total = sum(len(b) for b, _ in subs)
+        assert total >= _best_single(ENV, queue)
+        # the flat concatenation never duplicates a request
+        rids = [r.rid for b, _ in subs for r in b]
+        assert len(rids) == len(set(rids))

@@ -248,6 +248,51 @@ def test_degradation_exit_requires_degraded_era_finishes():
     assert not c2.observe(0)              # two finishes: exit
 
 
+def test_rising_edge_requant_skips_serving_inert_planes():
+    """The analytic plane emits ``k`` tokens per segment REGARDLESS of
+    method (``requant_effective`` False), so flipping its live cohorts
+    at the rising edge would change nothing the plane delivers while
+    loosening the oracle's admission latency bound — pure pricing
+    optimism that only perturbs the tail.  The runtime must skip the
+    flip there; the real-engine positive case is
+    ``test_requant_flips_engine_cohort_midflight``."""
+    assert AnalyticContinuousExecutor(capacity=4).requant_effective \
+        is False
+    rt = ContinuousRuntime(ENV, "dftsp:quant=W16A16",
+                           AnalyticContinuousExecutor(capacity=4), k=64,
+                           degradation=DegradationController(
+                               queue_high=2, queue_low=0, patience=2))
+    m = rt.run(gen=RequestGenerator(rate=30, seed=0), n_epochs=4,
+               warmup_epochs=0)
+    conserved(m)
+    # cohorts STARTING while degraded may still serve the degraded
+    # method (that selection is per-cohort-start, not a live flip);
+    # only the mid-flight requant must not have happened
+    assert m.requanted == 0
+
+
+def test_requant_flips_engine_cohort_midflight():
+    """Mid-flight requant on the real engine: rows that finished before
+    the rising edge served at the cohort's original method, rows after
+    it at the degraded one — same cohort, two precisions in
+    ``served_by_method``, conservation intact."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.runtime import EngineContinuousExecutor
+    eng = ServingEngine(reduced_cfg("bloom-3b"), batch_capacity=3,
+                        s_max=16, n_max=8, eos_id=-1)
+    cexec = EngineContinuousExecutor(eng, seed=0, collect_tokens=True)
+    rt = ContinuousRuntime(ENV, "dftsp:quant=W16A16", cexec, k=2,
+                           degradation=DegradationController(
+                               queue_high=4, queue_low=0, patience=2))
+    m = rt.run(gen=RequestGenerator(rate=10, seed=0, lengths=(4, 8)),
+               n_epochs=3, warmup_epochs=0)
+    conserved(m)
+    assert m.requanted >= 1
+    assert m.served_by_method.get("W16A16", 0) > 0
+    assert m.served_by_method.get("W8A8", 0) > 0
+    assert sum(m.served_by_method.values()) == m.served
+
+
 def test_degradation_sheds_only_below_priority_floor():
     c = DegradationController(shed_below_priority=1, degraded=True)
     q = [_req(rid=0, priority=0), _req(rid=1, priority=1),
